@@ -1,0 +1,61 @@
+"""LM-side microbenchmarks (beyond-paper cells): smoke-config train-step and
+decode-step throughput per architecture, plus kernel-vs-reference timings in
+interpret mode (structural, not perf-representative on CPU)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import models
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.specs import make_train_step
+from repro.train.optim import OptConfig, init_opt_state
+
+
+def run(archs=("llama3_8b", "rwkv6_3b", "qwen2_moe_a27b", "recurrentgemma_2b",
+               "whisper_tiny"), b=2, s=64, reps=3):
+    rows = []
+    for arch in archs:
+        cfg = get_config(arch).smoke()
+        params, _ = models.init(cfg, jax.random.PRNGKey(0))
+        opt = init_opt_state(params)
+        batch = {
+            "tokens": jnp.ones((b, s), jnp.int32),
+            "labels": jnp.ones((b, s), jnp.int32),
+        }
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = jnp.zeros((b, cfg.n_patches, cfg.d_model),
+                                              jnp.float32)
+        if cfg.family == "audio":
+            batch["enc_embeds"] = jnp.zeros((b, cfg.enc_seq_len, cfg.d_model),
+                                            jnp.float32)
+        step = jax.jit(make_train_step(cfg, OptConfig()))
+        params2, opt2, m = step(params, opt, batch)  # compile
+        jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            params2, opt2, m = step(params2, opt2, batch)
+        jax.block_until_ready(m["loss"])
+        dt = (time.perf_counter() - t0) / reps
+        rows.append((f"train_step_{arch}", dt * 1e6,
+                     f"{b * s / dt:.0f}tok/s"))
+
+        cache = models.init_cache(cfg, b, 32)
+        dstep = jax.jit(lambda p, c, t, pos: models.decode_step(cfg, p, c, t, pos))
+        if cfg.family == "audio":
+            from repro.models.whisper import whisper_prime_cache
+            cache = whisper_prime_cache(
+                cfg, params, cache,
+                jnp.zeros((b, cfg.enc_seq_len, cfg.d_model), jnp.float32))
+        tok = jnp.ones((b,), jnp.int32)
+        logits, cache = dstep(params, cache, tok, jnp.int32(0))
+        jax.block_until_ready(logits)
+        t0 = time.perf_counter()
+        for i in range(reps):
+            logits, cache = dstep(params, cache, tok, jnp.int32(i + 1))
+        jax.block_until_ready(logits)
+        dt = (time.perf_counter() - t0) / reps
+        rows.append((f"decode_step_{arch}", dt * 1e6, f"{b / dt:.0f}tok/s"))
+    return rows

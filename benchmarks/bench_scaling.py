@@ -1,0 +1,66 @@
+"""Paper Table II analogue: complexity / BSP cost model per algorithm,
+evaluated on the empirical block model b_l = floor((m/q) r^l) with the
+paper's fitted constants (q=4, r=0.6 spins; q=10, r=0.65 electrons), plus
+the weak-scaling law the paper demonstrates (double nodes per doubled m:
+work/node x8, memory/node x4 — their Fig. 8 commentary).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def block_model(m: int, q: float, r: float):
+    dims = []
+    b = m / q
+    while b >= 1.0 and sum(dims) < m:
+        dims.append(int(b))
+        b *= r
+    return dims
+
+
+def table2_costs(m: int, k: int, d: int, q: float, r: float, p: int):
+    """Flops and BSP comm per Davidson matvec, per the paper's Table II."""
+    dims = block_model(m, q, r)
+    nb = len(dims)
+    mq = m / q
+    md = mq * mq * k * d * d            # Davidson working-set elements M_D
+    return dict(
+        n_blocks=nb,
+        flops_list=mq**3 * k * d**2,
+        flops_dense=float(m) ** 3 * k * d**2,
+        supersteps_list=nb,
+        supersteps_sparse=1,
+        comm_list=md / p ** (2 / 3),
+        comm_sparse=md / p ** 0.5,
+    )
+
+
+def run():
+    rows = []
+    for system, (q, r, k, d) in {
+        "spins": (4, 0.6, 30, 2), "electrons": (10, 0.65, 26, 4)
+    }.items():
+        for m in (4096, 8192, 16384, 32768):
+            t0 = time.perf_counter()
+            c = table2_costs(m, k, d, q, r, p=256)
+            dt = time.perf_counter() - t0
+            rows.append((
+                f"table2_{system}_m{m}", dt * 1e6,
+                f"Nb={c['n_blocks']};Flist={c['flops_list']:.3e};"
+                f"Fdense={c['flops_dense']:.3e};"
+                f"comm_list={c['comm_list']:.3e};comm_sparse={c['comm_sparse']:.3e}",
+            ))
+        # weak scaling law: nodes n -> m = m0 * n (paper Fig. 8: near-ideal
+        # efficiency when doubling nodes with m)
+        for nodes in (1, 2, 4, 8):
+            m = 4096 * nodes
+            c = table2_costs(m, k, d, q, r, p=16 * nodes)
+            work_per_node = c["flops_list"] / nodes
+            rows.append((
+                f"weakscale_{system}_n{nodes}", 0.0,
+                f"m={m};work/node={work_per_node:.3e};"
+                f"rel={work_per_node / (table2_costs(4096, k, d, q, r, 16)['flops_list']):.2f}",
+            ))
+    return rows

@@ -1,0 +1,32 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+import os
+import sys
+
+os.environ.setdefault("JAX_ENABLE_X64", "1")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    from benchmarks import (bench_blocks, bench_contraction, bench_davidson,
+                            bench_lm, bench_scaling, bench_sweep)
+
+    suites = [
+        ("Fig5/10/13: contraction algorithms", bench_contraction.run),
+        ("Fig2: block structure", bench_blocks.run),
+        ("TableII: cost model + weak scaling", bench_scaling.run),
+        ("Alg1: Davidson", bench_davidson.run),
+        ("Fig6: sweep uniformity", bench_sweep.run),
+        ("LM cells (beyond paper)", bench_lm.run),
+    ]
+    print("name,us_per_call,derived")
+    for title, fn in suites:
+        print(f"# {title}", flush=True)
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception as e:  # keep the harness running
+            print(f"{title}_FAILED,0,{type(e).__name__}:{e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

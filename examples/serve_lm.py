@@ -1,0 +1,30 @@
+"""Serve a small model with batched requests through the cached decode path
+(the same step function the decode_* dry-run cells lower at pod scale).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch recurrentgemma_2b
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3_8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=24)
+    args = ap.parse_args(argv)
+
+    from repro.launch.serve import main as serve_main
+
+    serve_main(["--arch", args.arch, "--smoke",
+                "--batch", str(args.batch),
+                "--prompt-len", str(args.prompt_len),
+                "--gen-len", str(args.gen_len)])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Arch configs (10 assigned architectures + the paper's own DMRG systems)."""
+from .base import ARCH_IDS, SHAPES, ArchConfig, all_configs, get_config
+
+__all__ = ["ARCH_IDS", "SHAPES", "ArchConfig", "all_configs", "get_config"]

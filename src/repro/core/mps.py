@@ -1,0 +1,105 @@
+"""Matrix product states with U(1)^n block sparsity.
+
+Site tensor convention: T_j has indices (l: IN, sigma: OUT, r: OUT) and
+tensor charge 0; bond charges accumulate Q_{j+1} = Q_j - q_{sigma_j}, so the
+final (dangling, dim-1) right bond carries -Q_total.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..tensor.blocksparse import BlockSparseTensor, contract, svd_split, flip_flow
+from ..tensor.qn import Charge, IN, Index, OUT, qadd, qneg, qzero
+from .siteops import LocalSpace
+
+
+class MPS:
+    def __init__(self, tensors: List[BlockSparseTensor]):
+        self.tensors = tensors
+
+    @property
+    def n_sites(self) -> int:
+        return len(self.tensors)
+
+    def bond_dims(self) -> List[int]:
+        return [t.indices[2].dim for t in self.tensors[:-1]]
+
+    def max_bond(self) -> int:
+        dims = self.bond_dims()
+        return max(dims) if dims else 1
+
+    def total_blocks(self) -> int:
+        return sum(t.num_blocks for t in self.tensors)
+
+    def norm_sq(self):
+        """<psi|psi> by transfer-matrix contraction."""
+        env = None
+        for t in self.tensors:
+            bra = t.conj()
+            if env is None:
+                env = contract(bra, t, axes=((0, 1), (0, 1)))  # (r_bra, r_ket)
+            else:
+                tmp = contract(env, t, axes=((1,), (0,)))       # (r_bra, sigma, r)
+                env = contract(bra, tmp, axes=((0, 1), (0, 1)))
+        # env is (1,1)-ish block tensor; sum its entries
+        acc = 0.0
+        for b in env.blocks.values():
+            acc = acc + jnp.sum(b)
+        return jnp.real(acc)
+
+    def copy(self) -> "MPS":
+        return MPS([BlockSparseTensor(t.indices, dict(t.blocks), t.charge) for t in self.tensors])
+
+
+def product_state_mps(
+    space: LocalSpace, states: Sequence[int], dtype=jnp.float64
+) -> MPS:
+    """Bond-dimension-1 MPS for a product basis state (e.g. Neel)."""
+    nq = len(space.state_charges[0])
+    tensors = []
+    q_left = qzero(nq)
+    for s in states:
+        q_right = tuple(a - b for a, b in zip(q_left, space.state_charges[s]))
+        lix = Index(((q_left, 1),), IN, "l")
+        rix = Index(((q_right, 1),), OUT, "r")
+        block = jnp.ones((1, 1, 1), dtype)
+        tensors.append(
+            BlockSparseTensor([lix, space.index, rix], {(0, s, 0): block})
+        )
+        q_left = q_right
+    return MPS(tensors)
+
+
+def neel_states(space: LocalSpace, n: int) -> List[int]:
+    """Alternating up/down (spins) or up-electron/down-electron (Hubbard
+    half filling): a total-charge-zero / half-filled starting state."""
+    if space.name == "spin_half":
+        return [0 if i % 2 == 0 else 1 for i in range(n)]
+    if space.name == "electron":
+        return [1 if i % 2 == 0 else 2 for i in range(n)]
+    raise ValueError(space.name)
+
+
+def total_charge(space: LocalSpace, states: Sequence[int]) -> Charge:
+    nq = len(space.state_charges[0])
+    q = qzero(nq)
+    for s in states:
+        q = qadd(q, space.state_charges[s])
+    return q
+
+
+def right_canonicalize(mps: MPS, max_bond: int = 10**9, cutoff: float = 0.0) -> MPS:
+    """Sweep right-to-left, SVD-splitting each bond; center lands at site 0."""
+    tensors = list(mps.tensors)
+    n = len(tensors)
+    for j in range(n - 1, 0, -1):
+        theta = contract(tensors[j - 1], tensors[j], axes=((2,), (0,)))
+        U, V, _, _ = svd_split(theta, 2, max_bond=max_bond, cutoff=cutoff, absorb="left")
+        U = flip_flow(U, 2)
+        V = flip_flow(V, 0)
+        tensors[j - 1], tensors[j] = U, V
+    return MPS(tensors)

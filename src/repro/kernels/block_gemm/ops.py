@@ -1,0 +1,78 @@
+"""Jit'd public wrapper for the block-sparse GEMM kernel.
+
+Handles pair sorting, MXU-tile padding, and the interpret-mode fallback used
+for CPU validation (this container has no TPU; ``interpret=True`` executes the
+kernel body in Python, per-kernel tests assert allclose vs ``ref.py``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import block_sparse_matmul as _kernel_call
+from .ref import block_sparse_matmul_ref
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_out", "bm", "bn", "bk", "interpret", "use_kernel")
+)
+def block_sparse_matmul(
+    lhs: jax.Array,
+    rhs: jax.Array,
+    out_idx: jax.Array,
+    num_out: int,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Batched block-sparse GEMM: out[o] = sum_{p:out_idx[p]=o} lhs[p]@rhs[p].
+
+    ``lhs``: [P, BM, BK]; ``rhs``: [P, BK, BN]; ``out_idx``: [P] int32 sorted.
+    Pads BM/BK/BN up to multiples of the tile sizes (MXU alignment), runs the
+    Pallas kernel, and slices the padding back off.
+    """
+    if not use_kernel:
+        return block_sparse_matmul_ref(lhs, rhs, out_idx, num_out)
+    P, BM, BK = lhs.shape
+    _, _, BN = rhs.shape
+
+    def _pad_dim(d: int, tile: int, align: int) -> int:
+        p = _round_up(d, align)  # sublane/lane alignment
+        return _round_up(p, tile) if p > tile else p  # tile divisibility
+
+    pm = _pad_dim(BM, bm, 8)
+    pk = _pad_dim(BK, bk, 128)
+    pn = _pad_dim(BN, bn, 128)
+    lhs_p = jnp.pad(lhs, ((0, 0), (0, pm - BM), (0, pk - BK)))
+    rhs_p = jnp.pad(rhs, ((0, 0), (0, pk - BK), (0, pn - BN)))
+    out = _kernel_call(
+        lhs_p,
+        rhs_p,
+        out_idx.astype(jnp.int32),
+        num_out,
+        bm=bm,
+        bn=bn,
+        bk=bk,
+        interpret=interpret,
+    )
+    return out[:, :BM, :BN]
+
+
+def pack_pairs(pairs, num_out):
+    """Sort (lhs_i, rhs_i, out_i) triples by out block id; return index arrays."""
+    pairs = sorted(pairs, key=lambda t: t[2])
+    li = np.array([p[0] for p in pairs], np.int32)
+    ri = np.array([p[1] for p in pairs], np.int32)
+    oi = np.array([p[2] for p in pairs], np.int32)
+    assert len(set(oi.tolist())) == num_out, "every output block needs >=1 pair"
+    return li, ri, oi

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the batched block-sparse GEMM kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_sparse_matmul_ref(
+    lhs: jax.Array, rhs: jax.Array, out_idx: jax.Array, num_out: int, out_dtype=None
+) -> jax.Array:
+    """out[o] = sum_{p: out_idx[p]==o} lhs[p] @ rhs[p] (segment-sum oracle)."""
+    out_dtype = out_dtype or lhs.dtype
+    acc = jnp.float64 if lhs.dtype == jnp.float64 else jnp.float32
+    prod = jnp.einsum(
+        "pmk,pkn->pmn", lhs.astype(acc), rhs.astype(acc)
+    )
+    out = jax.ops.segment_sum(prod, out_idx, num_segments=num_out)
+    return out.astype(out_dtype)

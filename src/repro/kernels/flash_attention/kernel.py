@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: causal flash attention (prefill hot-spot).
+
+Online-softmax tiling (Dao et al., adapted to TPU memory hierarchy): the
+grid is (batch*heads, S/bq, S/bk) with the key dim innermost; a float32
+VMEM accumulator carries (m, l, acc) across key blocks, so the [S, S]
+score matrix never leaves VMEM and HBM traffic is O(S*D) per head.  Fully
+masked key blocks (block start beyond the causal frontier) are skipped via
+pl.when — the TPU analogue of flash attention's triangular block pruning;
+with bq == bk this halves the work vs. dense scoring.
+
+Block shapes are (bq x d) / (bk x d) with d the head dim (128-lane aligned
+for the MXU when d in {64,128,256}; the ops.py wrapper pads d otherwise).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0**30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            bq: int, bk: int, scale: float, nk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # causal frontier: key block strictly after the query block -> no work
+    @pl.when(ki * bk <= qi * bq + bq - 1)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)           # [bq, d]
+        k = k_ref[0].astype(jnp.float32)           # [bk, d]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                   # [bq, bk]
+        qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+
+        m_prev = m_ref[...]                         # [bq, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                      # [bq, bk]
+        alpha = jnp.exp(m_prev - m_new)             # [bq, 1]
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+def flash_attention(q, k, v, *, bq: int = 256, bk: int = 256,
+                    scale: float | None = None, interpret: bool = False):
+    """q,k,v: [BH, S, D] (heads pre-broadcast/flattened); causal.
+    Returns [BH, S, D].  ``scale`` defaults to 1/sqrt(D) — pass the
+    pre-padding head dim's scale when D was padded for lane alignment."""
+    bh, s, d = q.shape
+    bq, bk = min(bq, s), min(bk, s)
+    assert s % bq == 0 and s % bk == 0
+    nq, nk = s // bq, s // bk
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+
+    grid = (bh, nq, nk)
+    return pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=bk, scale=scale, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

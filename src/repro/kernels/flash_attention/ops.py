@@ -1,0 +1,40 @@
+"""Jit'd wrapper: [B,S,H,D] GQA layout -> flash kernel layout, with padding.
+
+On TPU this is the production prefill path; on CPU (this container) it runs
+in interpret mode for validation only — the jnp chunked attention in
+models/attention.py is the lowering used by the dry-run.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention as _kernel
+from .ref import flash_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk", "interpret", "use_kernel"))
+def flash_attention_bshd(q, k, v, *, bq: int = 256, bk: int = 256,
+                         interpret: bool = False, use_kernel: bool = True):
+    """q: [B,S,H,D]; k,v: [B,S,Hkv,D] (broadcast to H); causal; -> [B,S,H,D]."""
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.broadcast_to(k[:, :, :, None], (b, s, hkv, rep, d)).reshape(b, s, h, d)
+        v = jnp.broadcast_to(v[:, :, :, None], (b, s, hkv, rep, d)).reshape(b, s, h, d)
+    qt = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kt = k.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vt = v.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    if use_kernel:
+        dp = ((d + 127) // 128) * 128  # lane alignment
+        if dp != d:
+            pad = ((0, 0), (0, 0), (0, dp - d))
+            qt, kt, vt = jnp.pad(qt, pad), jnp.pad(kt, pad), jnp.pad(vt, pad)
+        o = _kernel(qt, kt, vt, bq=bq, bk=bk, scale=1.0 / (d ** 0.5),
+                    interpret=interpret)[:, :, :d]
+    else:
+        o = flash_attention_ref(qt, kt, vt)
+    return o.reshape(b, h, s, d).transpose(0, 2, 1, 3)

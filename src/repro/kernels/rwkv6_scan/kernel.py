@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: RWKV6 chunked linear-attention scan.
+
+Implements the same overflow-free chunked algorithm as models/rwkv6.py
+(cumulative log-decay, pairwise exponents <= 0), with the cross-chunk state
+S [N, N] held in a float32 VMEM scratch across the sequential chunk grid
+dim — state never round-trips to HBM within a head's scan.
+
+Grid: (B*H, T/C); chunk dim innermost and sequential.  Per step, VMEM holds
+r,k,v,logw chunk tiles [C, N], the [C, C] pairwise decay matrix per channel
+loop... no — the pairwise term is computed as einsum over N inside VMEM:
+for head dims N<=128 and chunks C<=64 everything fits comfortably
+(C*C*N*4B = 1 MiB at C=64, N=64).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, s_ref, *, chunk: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0].astype(jnp.float32)      # [C, N]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    lw = lw_ref[0].astype(jnp.float32)    # log decay, <= 0
+    u = u_ref[0].astype(jnp.float32)      # [1, N] bonus
+
+    L = jnp.cumsum(lw, axis=0)            # inclusive
+    Lprev = L - lw                        # exclusive
+    s = s_ref[...]
+
+    # carry-in from previous chunks
+    carry = jax.lax.dot_general(
+        r * jnp.exp(Lprev), s, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                      # [C, N_v]
+
+    # intra-chunk pairwise: A[t,i,n] = exp(Lprev[t,n] - L[i,n]), i < t
+    expo = Lprev[:, None, :] - L[None, :, :]          # [C, C, N]
+    A = jnp.exp(jnp.clip(expo, -60.0, 0.0))
+    scores = jnp.einsum("tn,in,tin->ti", r, k, A)
+    mask = (jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+            > jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1))
+    scores = jnp.where(mask, scores, 0.0)
+    intra = jax.lax.dot_general(
+        scores, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    bonus = jnp.sum(r * k * u, axis=1, keepdims=True) * v
+    o_ref[0] = (carry + intra + bonus).astype(o_ref.dtype)
+
+    # state update: S' = diag(exp(L_C)) S + sum_i exp(L_C - L_i) k_i (x) v_i
+    Lc = L[-1:, :]                        # [1, N]
+    kdec = k * jnp.exp(Lc - L)            # [C, N]
+    s_ref[...] = s * jnp.exp(Lc)[0][:, None] + jax.lax.dot_general(
+        kdec, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def rwkv6_scan(r, k, v, logw, u, *, chunk: int = 32, interpret: bool = False):
+    """r,k,v,logw: [BH, T, N]; u: [BH, N].  Returns wkv output [BH, T, N]."""
+    bh, t, n = r.shape
+    chunk = min(chunk, t)
+    assert t % chunk == 0
+    nc = t // chunk
+    u2 = u[:, None, :]  # [BH, 1, N]
+
+    grid = (bh, nc)
+    return pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, 1, n), lambda b, c: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, n), r.dtype),
+        scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u2)

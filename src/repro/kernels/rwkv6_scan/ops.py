@@ -1,0 +1,34 @@
+"""Jit'd wrapper for the RWKV6 scan kernel ([B,T,H,N] model layout)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rwkv6_scan as _kernel
+from .ref import rwkv6_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret", "use_kernel"))
+def rwkv6_wkv(r, k, v, logw, u, *, chunk: int = 32, interpret: bool = False,
+              use_kernel: bool = True):
+    """r,k,v,logw: [B,T,H,N]; u: [H,N] -> [B,T,H,N] wkv output."""
+    b, t, h, n = r.shape
+
+    def to_bh(a):
+        return a.transpose(0, 2, 1, 3).reshape(b * h, t, n)
+
+    rb, kb, vb, lb = to_bh(r), to_bh(k), to_bh(v), to_bh(logw)
+    ub = jnp.tile(u, (b, 1))
+    pad = (-t) % chunk
+    if pad:
+        rb, kb, vb = (jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+                      for a in (rb, kb, vb))
+        lb = jnp.pad(lb, ((0, 0), (0, pad), (0, 0)))
+    if use_kernel:
+        o = _kernel(rb, kb, vb, lb, ub, chunk=chunk, interpret=interpret)
+    else:
+        o = rwkv6_scan_ref(rb, kb, vb, lb, ub)
+    o = o[:, :t]
+    return o.reshape(b, h, t, n).transpose(0, 2, 1, 3)

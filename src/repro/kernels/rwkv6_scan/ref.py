@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the RWKV6 scan kernel: naive O(T) recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_scan_ref(r, k, v, logw, u):
+    """r,k,v,logw: [BH,T,N]; u: [BH,N] -> out [BH,T,N].
+
+    out_t = r_t . (S_t + u * k_t^T v_t);  S_{t+1} = diag(w_t) S_t + k_t^T v_t
+    """
+    bh, t, n = r.shape
+
+    def step(s, i):
+        kv = jnp.einsum("bn,bm->bnm", k[:, i], v[:, i])
+        o = jnp.einsum("bn,bnm->bm", r[:, i], s + u[:, :, None] * kv)
+        s = s * jnp.exp(logw[:, i])[:, :, None] + kv
+        return s, o
+
+    _, outs = jax.lax.scan(step, jnp.zeros((bh, n, n), jnp.float32),
+                           jnp.arange(t))
+    return jnp.moveaxis(outs, 0, 1)

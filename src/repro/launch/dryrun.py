@@ -1,0 +1,276 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) cell
+on the production meshes, record memory/cost/collective analysis for the
+roofline (EXPERIMENTS.md).
+
+The two lines above run before ANY other import — jax locks the device count
+at first init.  Each cell writes artifacts/dryrun/<arch>_<shape>_<mesh>.json;
+completed cells are skipped unless --force.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3_8b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all            # every cell, both meshes
+  python -m repro.launch.dryrun --dmrg           # the paper's DMRG cells
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+ART = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+# ring-algorithm wire-byte multipliers applied to the HLO result shape
+_COLL_RE = re.compile(
+    r"=\s+((?:\(|)[a-z0-9](?:[^ ]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACES_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of an HLO shape string (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-chip wire bytes by collective type, from the post-SPMD HLO.
+
+    Ring-model multipliers on the op's RESULT bytes R with group size G:
+      all-gather:          R * (G-1)/G      (each chip receives the rest)
+      all-reduce:          2R * (G-1)/G     (reduce-scatter + all-gather)
+      reduce-scatter:      R * (G-1)        (input = R*G, sends (G-1)/G of it)
+      all-to-all:          R * (G-1)/G
+      collective-permute:  R
+    """
+    out = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0, "count": 0}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        r = _shape_bytes(shape_str)
+        g = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = int(gm.group(2))  # [n_groups, group_size]
+        else:
+            gb = _GROUPS_BRACES_RE.search(line)
+            if gb:
+                g = len(gb.group(1).split(","))
+        if g <= 1 and op != "collective-permute":
+            continue
+        if op == "all-gather":
+            wire = r * (g - 1) / g
+        elif op == "all-reduce":
+            wire = 2.0 * r * (g - 1) / g
+        elif op == "reduce-scatter":
+            wire = r * (g - 1)
+        elif op == "all-to-all":
+            wire = r * (g - 1) / g
+        else:  # collective-permute
+            wire = float(r)
+        out[op] += wire
+        out["count"] += 1
+    out["total"] = sum(v for k, v in out.items() if k != "count")
+    return out
+
+
+def model_flops_estimate(arch: str, shape_name: str) -> float:
+    """6*N*D for train (N = active params, D = tokens); 2*N*D for fwd-only;
+    decode: 2*N per token * batch (one step)."""
+    from repro.configs import SHAPES, get_config
+
+    cfg = get_config(arch)
+    info = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if info["kind"] == "train":
+        return 6.0 * n * info["global_batch"] * info["seq_len"]
+    if info["kind"] == "prefill":
+        return 2.0 * n * info["global_batch"] * info["seq_len"]
+    return 2.0 * n * info["global_batch"]  # decode: one token per sequence
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             force: bool = False) -> dict:
+    mesh_name = "pod512" if multi_pod else "pod256"
+    out_path = out_dir / f"{arch}_{shape_name}_{mesh_name}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    import jax
+    from repro.configs import get_config
+    from repro.launch.mesh import HW, make_production_mesh
+    from repro.launch import specs
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    rec = dict(arch=arch, shape=shape_name, mesh=mesh_name, chips=n_chips)
+
+    if arch.endswith("_list"):
+        fn, args, in_sh, out_sh, donate = specs.dmrg_list_cell(arch, mesh)
+    elif arch.startswith("dmrg"):
+        fn, args, in_sh, out_sh, donate = specs.dmrg_cell(arch, mesh)
+    else:
+        cfg = get_config(arch)
+        ok, why = cfg.shape_supported(shape_name)
+        if not ok:
+            rec.update(status="skipped", reason=why)
+            out_path.write_text(json.dumps(rec, indent=1))
+            return rec
+        fn, args, in_sh, out_sh, donate = specs.lm_cell(arch, shape_name, mesh)
+
+    with jax.sharding.set_mesh(mesh):
+        jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                      donate_argnums=donate)
+        lowered = jfn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, list) else cost
+        hlo = compiled.as_text()
+
+    # while-trip-aware per-chip costs (XLA cost_analysis counts loop bodies
+    # once — see launch/hlo_costs.py); keep the raw numbers for reference
+    from repro.launch.hlo_costs import total_costs
+
+    tc = total_costs(hlo)
+    coll = dict(tc["coll"])
+    coll["count"] = 0
+    coll["total"] = tc["coll_total"]
+
+    flops_per_chip = float(tc["flops"])
+    bytes_per_chip = float(tc["bytes"])
+    compute_term = flops_per_chip / HW["peak_flops_bf16"]
+    memory_term = bytes_per_chip / HW["hbm_bw"]
+    collective_term = coll["total"] / HW["ici_bw"]
+    terms = dict(compute=compute_term, memory=memory_term,
+                 collective=collective_term)
+    dominant = max(terms, key=terms.get)
+
+    mf = 0.0 if arch.startswith("dmrg") else model_flops_estimate(arch, shape_name)
+    rec.update(
+        status="ok",
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        memory=dict(
+            argument_bytes=mem.argument_size_in_bytes,
+            output_bytes=mem.output_size_in_bytes,
+            temp_bytes=mem.temp_size_in_bytes,
+            alias_bytes=mem.alias_size_in_bytes,
+            peak_bytes=mem.argument_size_in_bytes + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes - mem.alias_size_in_bytes,
+            hbm_bytes=HW["hbm_bytes"],
+        ),
+        flops_per_chip=flops_per_chip,
+        bytes_per_chip=bytes_per_chip,
+        xla_flops_per_chip=float(cost.get("flops", 0.0)),       # loop-body-once
+        xla_bytes_per_chip=float(cost.get("bytes accessed", 0.0)),
+        collective=coll,
+        roofline=dict(
+            compute_s=compute_term,
+            memory_s=memory_term,
+            collective_s=collective_term,
+            dominant=dominant,
+            step_s_lower_bound=max(terms.values()),
+        ),
+        model_flops_global=mf,
+        model_flops_per_chip=mf / n_chips,
+        useful_flops_ratio=(mf / n_chips / flops_per_chip) if flops_per_chip else 0.0,
+    )
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def all_cells(include_dmrg: bool = True):
+    from repro.configs import ARCH_IDS, SHAPES, get_config
+
+    cells = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            cells.append((arch, shape))
+    if include_dmrg:
+        for name in ("dmrg_spins", "dmrg_electrons", "dmrg_spins_opt",
+                     "dmrg_electrons_opt", "dmrg_spins_list",
+                     "dmrg_electrons_list"):
+            cells.append((name, "davidson_m32k"))
+    return cells
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--dmrg", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=str(ART))
+    args = ap.parse_args(argv)
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    if args.all or args.dmrg:
+        cells = all_cells() if args.all else [
+            (n, "davidson_m32k") for n in ("dmrg_spins", "dmrg_electrons")
+        ]
+        failures = 0
+        for arch, shape in cells:
+            for mp in (False, True):
+                tag = f"{arch} x {shape} [{'pod512' if mp else 'pod256'}]"
+                try:
+                    rec = run_cell(arch, shape, mp, out_dir, force=args.force)
+                    if rec["status"] == "ok":
+                        r = rec["roofline"]
+                        print(f"OK   {tag}: dominant={r['dominant']} "
+                              f"step>={r['step_s_lower_bound']:.4f}s "
+                              f"peak={rec['memory']['peak_bytes']/2**30:.2f}GiB "
+                              f"(compile {rec['compile_s']:.0f}s)", flush=True)
+                    else:
+                        print(f"SKIP {tag}: {rec['reason']}", flush=True)
+                except Exception as e:
+                    failures += 1
+                    print(f"FAIL {tag}: {e}", flush=True)
+                    traceback.print_exc()
+        sys.exit(1 if failures else 0)
+
+    rec = run_cell(args.arch, args.shape, args.multi_pod, out_dir,
+                   force=args.force)
+    print(json.dumps(rec, indent=1))
+
+
+if __name__ == "__main__":
+    main()

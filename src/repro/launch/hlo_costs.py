@@ -1,0 +1,229 @@
+"""Roofline cost extraction from post-SPMD compiled HLO text.
+
+``compiled.cost_analysis()`` (XLA HloCostAnalysis) counts while-loop bodies
+ONCE, which silently drops ~L x the flops of an L-layer scanned model.  This
+module parses ``compiled.as_text()`` into the computation call graph, counts
+
+  * flops            — dot ops: 2 * nelems(result) * prod(contracted dims)
+  * hbm bytes        — operand + result bytes of top-level instructions
+                       (fusion bodies excluded: their internals never hit HBM)
+  * collective bytes — ring-model wire bytes per chip by collective type
+
+per computation, and propagates totals through call edges with while-loop
+trip-count multipliers (parsed from the loop condition's comparison constant).
+All numbers are PER CHIP because the module is already SPMD-partitioned.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COMP_START = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->.*\{\s*$")
+_INSTR = re.compile(
+    r"^\s+(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)\s*([\w\-]+)\((.*)$"
+)
+_TRIP_BC = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_SHAPE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OPERAND = re.compile(r"%([\w\.\-]+)")
+_CALL_ATTR = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w\.\-]+)")
+_TRIP = re.compile(r"constant\((\d+)\)")
+_REPL_GROUPS = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_REPL_BRACES = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+_NO_TRAFFIC = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "iota",
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+
+def _shape_elems_bytes(shape_str: str) -> Tuple[int, int]:
+    elems = bytes_ = 0
+    for dt, dims in _SHAPE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        bytes_ += n * _DTYPE_BYTES[dt]
+    return elems, bytes_
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in COLLECTIVES}
+    )
+    calls: List[Tuple[str, str, int]] = dataclasses.field(default_factory=list)
+    # (child, role, instr_id) where role in {"call", "body", "condition"};
+    # body+condition of the same while share an instr_id
+    trip_hint: int = 1  # for condition computations: max int constant seen
+    trips: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # instr_id -> known_trip_count from the while's backend_config
+
+
+def parse_computations(hlo: str) -> Tuple[Dict[str, CompCost], Optional[str]]:
+    comps: Dict[str, CompCost] = {}
+    entry = None
+    cur: Optional[str] = None
+    symtab: Dict[str, str] = {}
+    instr_id = 0
+
+    for raw in hlo.splitlines():
+        m = _COMP_START.match(raw)
+        if m and ("->" in raw):
+            cur = m.group(1)
+            comps[cur] = CompCost()
+            symtab = {}
+            if raw.startswith("ENTRY"):
+                entry = cur
+            # parameter shapes from the signature
+            for pname, pshape in re.findall(r"%?([\w\.\-]+):\s*((?:\(|)[\w\[\],]*)",
+                                            m.group(2)):
+                symtab[pname] = pshape
+            continue
+        if cur is None:
+            continue
+        if raw.strip() == "}":
+            cur = None
+            continue
+        im = _INSTR.match(raw)
+        if not im:
+            continue
+        name, rshape, opcode, rest = im.groups()
+        symtab[name] = rshape
+        cc = comps[cur]
+        instr_id += 1
+
+        # call edges; while trips come from backend_config known_trip_count
+        trip_bc = _TRIP_BC.search(raw)
+        if trip_bc:
+            cc.trips[instr_id] = int(trip_bc.group(1))
+        for attr in _CALL_ATTR.finditer(raw):
+            role = raw[attr.start():attr.start() + 4]
+            role = {"body": "body", "cond": "condition"}.get(role, "call")
+            cc.calls.append((attr.group(1), role, instr_id))
+
+        # trip-count hint (int constants in this computation)
+        if opcode == "constant":
+            tm = _TRIP.search(raw)
+            if tm:
+                cc.trip_hint = max(cc.trip_hint, int(tm.group(1)))
+
+        relems, rbytes = _shape_elems_bytes(rshape)
+
+        # flops: dot = 2 * result_elems * contracted size
+        if opcode == "dot":
+            lhs_name = None
+            om = _OPERAND.search(rest)
+            if om:
+                lhs_name = om.group(1)
+            contracted = 1
+            cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", raw)
+            if cm and lhs_name and lhs_name in symtab:
+                lshape = _SHAPE.search(symtab[lhs_name])
+                if lshape:
+                    ldims = [int(x) for x in lshape.group(2).split(",") if x]
+                    for ci in cm.group(1).split(","):
+                        if ci:
+                            contracted *= ldims[int(ci)]
+            cc.flops += 2.0 * relems * contracted
+        elif opcode in ("convolution",):
+            cc.flops += 2.0 * relems  # lower bound; convs are negligible here
+
+        # collectives (wire bytes, ring model)
+        base_op = opcode[:-6] if opcode.endswith("-start") else opcode
+        if base_op in COLLECTIVES:
+            g = 1
+            gm = _REPL_GROUPS.search(raw)
+            if gm:
+                g = int(gm.group(2))
+            else:
+                gb = _REPL_BRACES.search(raw)
+                if gb:
+                    g = len(gb.group(1).split(","))
+            if base_op == "all-gather":
+                wire = rbytes * (g - 1) / max(g, 1)
+            elif base_op == "all-reduce":
+                wire = 2.0 * rbytes * (g - 1) / max(g, 1)
+            elif base_op == "reduce-scatter":
+                wire = rbytes * (g - 1)
+            elif base_op in ("all-to-all", "ragged-all-to-all"):
+                wire = rbytes * (g - 1) / max(g, 1)
+            else:  # collective-permute
+                wire = float(rbytes)
+            cc.coll[base_op] += wire
+
+        # HBM traffic: result + operands, top-level non-bookkeeping ops
+        if opcode not in _NO_TRAFFIC:
+            obytes = 0
+            # operands up to attribute section — conservative: names in rest
+            for on in _OPERAND.findall(rest.split("),")[0]):
+                if on in symtab:
+                    _, ob = _shape_elems_bytes(symtab[on])
+                    obytes += ob
+            cc.bytes += rbytes + obytes
+
+    return comps, entry
+
+
+def total_costs(hlo: str) -> Dict:
+    """Aggregate (flops, bytes, collectives) from ENTRY with while-trip
+    multipliers.  Fusion-called computations contribute flops + collectives
+    but not HBM bytes (their call site's operands/result already count)."""
+    comps, entry = parse_computations(hlo)
+    if entry is None:
+        return dict(flops=0.0, bytes=0.0, coll={c: 0.0 for c in COLLECTIVES})
+
+    # fusion bodies never touch HBM themselves — call-site operands count
+    for c in comps.values():
+        for child, role, _ in c.calls:
+            if role == "call" and child in comps:
+                comps[child].bytes = 0.0
+
+    memo: Dict[str, Dict] = {}
+
+    def walk(name: str, stack=()) -> Dict:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return dict(flops=0.0, bytes=0.0, coll={c: 0.0 for c in COLLECTIVES})
+        c = comps[name]
+        out = dict(flops=c.flops, bytes=c.bytes, coll=dict(c.coll))
+        for child, role, iid in c.calls:
+            if role == "condition":
+                continue
+            mult = 1
+            if role == "body":
+                # backend_config known_trip_count, else the condition's
+                # comparison constant on the SAME while instruction
+                mult = c.trips.get(iid, 0)
+                if not mult:
+                    for cd, r2, iid2 in c.calls:
+                        if r2 == "condition" and iid2 == iid and cd in comps:
+                            mult = max(mult, comps[cd].trip_hint)
+                mult = max(mult, 1)
+            sub = walk(child, stack + (name,))
+            out["flops"] += mult * sub["flops"]
+            out["bytes"] += mult * sub["bytes"]
+            for k in out["coll"]:
+                out["coll"][k] += mult * sub["coll"][k]
+        memo[name] = out
+        return out
+
+    tot = walk(entry)
+    tot["coll_total"] = sum(tot["coll"].values())
+    return tot

@@ -1,0 +1,34 @@
+"""Production meshes + TPU v5e hardware constants for the roofline.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module touches no jax device state — required because only
+launch/dryrun.py requests 512 placeholder host devices.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_mesh(shape, axes):
+    """Arbitrary (elastic) mesh with the same axis-type convention."""
+    return jax.make_mesh(
+        tuple(shape), tuple(axes),
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+# TPU v5e, per chip (roofline constants from the assignment)
+HW = dict(
+    peak_flops_bf16=197e12,   # FLOP/s
+    hbm_bw=819e9,             # B/s
+    ici_bw=50e9,              # B/s per link
+    hbm_bytes=16 * 1024**3,   # 16 GiB
+)

@@ -1,0 +1,77 @@
+"""Batched serving driver: prefill-free cached decode over a request batch.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3_8b --smoke \
+        --batch 4 --prompt-len 16 --gen-len 32
+
+Feeds each request's prompt tokens through the jitted one-token decode step
+(filling the KV/recurrent cache), then greedy-decodes ``gen-len`` tokens.
+The same step function is what the decode_* dry-run cells lower at scale.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from repro import models
+    from repro.configs import get_config
+    from repro.models.lm import padded_vocab
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    params, _ = models.init(cfg, jax.random.PRNGKey(args.seed))
+    cache_len = args.prompt_len + args.gen_len
+    cache = models.init_cache(cfg, args.batch, cache_len)
+    if cfg.family == "audio":
+        from repro.models.whisper import whisper_prime_cache
+        enc = jax.random.normal(jax.random.PRNGKey(1),
+                                (args.batch, cfg.enc_seq_len, cfg.d_model),
+                                jnp.float32)
+        cache = whisper_prime_cache(cfg, params, cache, enc)
+
+    step = jax.jit(
+        lambda p, c, t, pos: models.decode_step(cfg, p, c, t, pos),
+        donate_argnums=(1,),
+    )
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(args.seed + 1),
+        (args.batch, args.prompt_len), 0, cfg.vocab_size, jnp.int32)
+
+    # prefill by stepping the prompt through the cache
+    t0 = time.perf_counter()
+    logits = None
+    for t in range(args.prompt_len):
+        logits, cache = step(params, cache, prompts[:, t], jnp.int32(t))
+    out = []
+    for t in range(args.gen_len):
+        nxt = jnp.argmax(logits[:, : cfg.vocab_size], axis=-1).astype(jnp.int32)
+        out.append(nxt)
+        logits, cache = step(params, cache, nxt,
+                             jnp.int32(args.prompt_len + t))
+    jax.block_until_ready(logits)
+    dt = time.perf_counter() - t0
+    toks = args.batch * (args.prompt_len + args.gen_len)
+    gen = jnp.stack(out, axis=1)
+    print(f"generated {gen.shape} tokens; {toks} steps in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s incl. compile)")
+    print("sample:", np.asarray(gen[0, :16]))
+    return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Logical-axis -> mesh-axis resolution.
+
+Each parameter/activation dim carries a logical axis name; ``RULES`` lists
+candidate mesh axes per logical axis in priority order.  Assignment is greedy
+per tensor with two constraints: a mesh axis is used at most once per tensor,
+and the dim size must be divisible by the mesh axis size (falls through to
+the next candidate, ultimately to replication).  This one mechanism expresses
+TP ("model"), FSDP ("data"), EP (experts over "model"), DP over "pod", and
+SP (cache sequence over "data" when batch can't shard, e.g. long_500k B=1).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisCandidate = Union[str, Tuple[str, ...], None]
+
+# priority-ordered candidates per logical axis
+RULES: Dict[str, Sequence[AxisCandidate]] = {
+    # weights
+    "embed": ["data", None],          # FSDP shard of the "reduction" dim
+    "embed2": [None],
+    "heads": ["model", None],         # TP
+    "kv_heads": ["model", None],
+    "ff": ["model", None],
+    "expert_ff": ["model", None],
+    "expert": ["model", None],        # EP when divisible (64e), else fall back
+    "expert_in": [None],
+    "vocab": ["model", None],
+    "rnn": ["model", None],
+    "rnn2": [None],
+    "lora": [None],
+    "conv": [None],
+    "head_dim": [None],
+    "hidden": ["model", None],        # activation feature dim
+    "layers": [None],                 # scan axis stays unsharded
+    # activations / inputs
+    "batch": [("pod", "data"), ("data",), None],
+    "seq": [None],
+    "cache_seq": ["data", "model", None],  # SP; "model" when batch takes "data"
+    "cache_batch": [("pod", "data"), ("data",), None],
+    "frames": [None],
+    "patches": [None],
+}
+
+
+def _axis_size(mesh: Mesh, cand: AxisCandidate) -> int:
+    if cand is None:
+        return 1
+    if isinstance(cand, tuple):
+        return int(np.prod([mesh.shape[a] for a in cand]))
+    return mesh.shape[cand]
+
+
+def spec_for(shape: Tuple[int, ...], axes: Tuple[str, ...], mesh: Mesh) -> P:
+    used: set = set()
+    out = []
+    for dim, ax in zip(shape, axes):
+        chosen = None
+        for cand in RULES.get(ax, [None]):
+            if cand is None:
+                break
+            names = cand if isinstance(cand, tuple) else (cand,)
+            if any(n not in mesh.shape for n in names):
+                continue
+            if any(n in used for n in names):
+                continue
+            if dim % _axis_size(mesh, cand) != 0:
+                continue
+            chosen = cand
+            used.update(names)
+            break
+        out.append(chosen)
+    return P(*out)
+
+
+def sharding_for(shape, axes, mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(tuple(shape), tuple(axes), mesh))
+
+
+def tree_shardings(shapes: Dict, axes: Dict, mesh: Mesh) -> Dict:
+    """shapes: flat dict path -> ShapeDtypeStruct/array; axes: path -> tuple."""
+    return {
+        k: sharding_for(v.shape, axes[k], mesh) for k, v in shapes.items()
+    }
+
+
+def batch_axes_for(cfg, shape_kind: str) -> Dict[str, Tuple[str, ...]]:
+    """Logical axes for each input-batch tensor of an arch."""
+    ax: Dict[str, Tuple[str, ...]] = {
+        "tokens": ("batch", "seq"),
+        "labels": ("batch", "seq"),
+    }
+    if cfg.family == "vlm":
+        ax["patch_embeds"] = ("batch", "patches", "embed2")
+    if cfg.family == "audio":
+        ax["enc_embeds"] = ("batch", "frames", "embed2")
+    return ax

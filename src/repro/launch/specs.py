@@ -1,0 +1,358 @@
+"""Cell builders for the multi-pod dry-run: (step fn, ShapeDtypeStruct inputs,
+in/out shardings) for every (architecture x input shape), plus the paper's
+own DMRG Davidson workload at production bond dimension.
+
+Everything here is allocation-free: parameters, optimizer state, and caches
+are jax.eval_shape skeletons; only the dry-run lowers/compiles them.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .. import models
+from ..configs import SHAPES, get_config
+from ..train.optim import OptConfig, adamw_update, init_opt_state, opt_state_axes
+from .sharding import batch_axes_for, sharding_for, tree_shardings
+
+
+def _dtype(cfg):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+def eval_params(cfg) -> Tuple[Dict, Dict]:
+    """(params as ShapeDtypeStructs, logical axes) without allocating."""
+    axes: Dict = {}
+
+    def f():
+        p, a = models.init(cfg, jax.random.PRNGKey(0))
+        axes.update(a)
+        return p
+
+    params = jax.eval_shape(f)
+    return params, axes
+
+
+def batch_specs(cfg, shape_name: str, *, with_labels: bool) -> Tuple[Dict, Dict]:
+    info = SHAPES[shape_name]
+    b, s = info["global_batch"], info["seq_len"]
+    dt = _dtype(cfg)
+    specs, axes = {}, {}
+    s_text = s
+    if cfg.family == "vlm":
+        s_text = s - cfg.n_patches
+        specs["patch_embeds"] = jax.ShapeDtypeStruct((b, cfg.n_patches, cfg.d_model), dt)
+    if cfg.family == "audio":
+        specs["enc_embeds"] = jax.ShapeDtypeStruct((b, cfg.enc_seq_len, cfg.d_model), dt)
+    specs["tokens"] = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+    if with_labels:
+        specs["labels"] = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+    ba = batch_axes_for(cfg, shape_name)
+    axes = {k: ba[k] for k in specs}
+    return specs, axes
+
+
+# ------------------------------------------------------------------- steps
+# gradient-accumulation microbatches per (arch) for the train_4k shape:
+# bounds activation memory for the biggest models (peak must fit 16 GiB HBM)
+MICROBATCHES = {
+    "qwen15_110b": 8,
+    "pixtral_12b": 4,
+    "llama3_8b": 2,
+    "codeqwen15_7b": 2,
+    "moonshot_v1_16b_a3b": 4,
+    "qwen2_moe_a27b": 2,
+    "rwkv6_3b": 4,
+    "recurrentgemma_2b": 2,
+}
+
+
+def make_train_step(cfg, oc: OptConfig, n_micro: int = 1, grad_shardings=None,
+                    compress: str | None = None):
+    def constrain(tree):
+        if grad_shardings is None:
+            return tree
+        return {k: jax.lax.with_sharding_constraint(v, grad_shardings[k])
+                for k, v in tree.items()}
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(
+                lambda p: models.loss_fn(cfg, p, batch)
+            )(params)
+        else:
+            def reshape(x):
+                return x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+
+            mbatch = {k: reshape(v) for k, v in batch.items()}
+            gzero = constrain({k: jnp.zeros(v.shape, jnp.float32)
+                               for k, v in params.items()})
+
+            def micro(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(
+                    lambda p: models.loss_fn(cfg, p, mb)
+                )(params)
+                gsum = constrain(
+                    {k: gsum[k] + g[k].astype(jnp.float32) for k in gsum}
+                )
+                return (gsum, lsum + l), None
+
+            (gsum, lsum), _ = jax.lax.scan(micro, (gzero, 0.0), mbatch)
+            grads = {k: v / n_micro for k, v in gsum.items()}
+            loss = lsum / n_micro
+        if compress:
+            from ..train.compress import compressed_grads
+
+            err = {k[4:]: v for k, v in opt_state.items()
+                   if k.startswith("err/")}
+            opt_state = {k: v for k, v in opt_state.items()
+                         if not k.startswith("err/")}
+            grads, new_err = compressed_grads(grads, err, compress)
+        new_p, new_s, metrics = adamw_update(oc, params, grads, opt_state)
+        if compress:
+            new_s.update({f"err/{k}": v for k, v in new_err.items()})
+        metrics["loss"] = loss
+        return new_p, new_s, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg):
+    def prefill(params, batch):
+        logits = models.forward(cfg, params, batch)
+        return logits[:, -1, : cfg.vocab_size]  # next-token logits
+
+    return prefill
+
+
+def make_decode_step(cfg):
+    def decode(params, cache, token, pos):
+        return models.decode_step(cfg, params, cache, token, pos)
+
+    return decode
+
+
+# -------------------------------------------------------------------- cells
+def lm_cell(arch: str, shape_name: str, mesh):
+    """Returns (fn, args tuple of SDS, in_shardings, out_shardings,
+    donate_argnums) for one dry-run cell."""
+    cfg = get_config(arch)
+    ok, why = cfg.shape_supported(shape_name)
+    if not ok:
+        raise ValueError(f"{arch} x {shape_name} skipped: {why}")
+    info = SHAPES[shape_name]
+    kind = info["kind"]
+    params, paxes = eval_params(cfg)
+    pshard = tree_shardings(params, paxes, mesh)
+    repl = NamedSharding(mesh, P())
+
+    if kind == "train":
+        oc = OptConfig()
+        opt = jax.eval_shape(init_opt_state, params)
+        oshard = tree_shardings(opt, opt_state_axes(paxes), mesh)
+        bspec, baxes = batch_specs(cfg, shape_name, with_labels=True)
+        bshard = tree_shardings(bspec, baxes, mesh)
+        fn = make_train_step(cfg, oc, MICROBATCHES.get(arch, 1),
+                             grad_shardings=pshard)
+        metrics_shard = {"grad_norm": repl, "lr": repl, "loss": repl}
+        return (
+            fn,
+            (params, opt, bspec),
+            (pshard, oshard, bshard),
+            (pshard, oshard, metrics_shard),
+            (0, 1),
+        )
+
+    if kind == "prefill":
+        bspec, baxes = batch_specs(cfg, shape_name, with_labels=False)
+        bshard = tree_shardings(bspec, baxes, mesh)
+        fn = make_prefill_step(cfg)
+        b = info["global_batch"]
+        out_shard = sharding_for((b, cfg.vocab_size), ("batch", "seq"), mesh)
+        return fn, (params, bspec), (pshard, bshard), out_shard, ()
+
+    # decode: one new token against a seq_len-deep cache
+    b, s = info["global_batch"], info["seq_len"]
+    if cfg.family == "audio":
+        from ..models.whisper import decode_cache_axes
+    else:
+        from ..models.lm import decode_cache_axes
+    cache = jax.eval_shape(lambda: models.init_cache(cfg, b, s))
+    caxes = decode_cache_axes(cfg)
+    cshard = tree_shardings(cache, caxes, mesh)
+    token = jax.ShapeDtypeStruct((b,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = make_decode_step(cfg)
+    from ..models.lm import padded_vocab
+
+    lshard = sharding_for((b, padded_vocab(cfg)), ("batch", "vocab"), mesh)
+    return (
+        fn,
+        (params, cache, token, pos),
+        (pshard, cshard, repl, repl),
+        (lshard, cshard),
+        (1,),
+    )
+
+
+# ---------------------------------------------------------------- DMRG cell
+DMRG_CELLS = {
+    # the paper's production workloads (Sec. V-VI): two-site Davidson matvec
+    # at large bond dimension, sparse-dense algorithm (dense distributed
+    # tensors, single contraction call).  *_opt variants are the beyond-paper
+    # hillclimbed versions (EXPERIMENTS.md §Perf): bf16 storage with f32 MXU
+    # accumulation for the env tensors and the m^2*k*d^2 intermediates.
+    "dmrg_spins": dict(m=32768, d=2, k=30, dtype="float32"),
+    "dmrg_electrons": dict(m=16384, d=4, k=26, dtype="float32"),
+    "dmrg_spins_opt": dict(m=32768, d=2, k=30, dtype="bfloat16"),
+    "dmrg_electrons_opt": dict(m=16384, d=4, k=26, dtype="bfloat16"),
+}
+
+
+def dmrg_davidson_fn(m: int, d: int, k: int, store_dtype=jnp.float32):
+    """One Davidson iteration body (paper Alg. 1 step): y = K x via the
+    environment contraction of Fig. 1d, Rayleigh quotient, residual norm.
+    Tensors are dense (sparse-dense algorithm) and sharded over the FULL
+    mesh — the paper's core parallelization decision.  All contractions
+    accumulate in f32; intermediates are stored in ``store_dtype``."""
+
+    def ein(spec, a, b):
+        r = jnp.einsum(spec, a, b, preferred_element_type=jnp.float32)
+        return r.astype(store_dtype)
+
+    def step(A, Wj, Wj1, B, x):
+        t = ein("ikl,lstr->ikstr", A, x)               # m^3 k d^2
+        t = ein("ikstr,kcsn->ictrn", t, Wj)            # m^2 k^2 d^3
+        t = ein("ictrn,nftg->icfrg", t, Wj1)
+        y = jnp.einsum("icfrg,jgr->icfj", t, B,
+                       preferred_element_type=jnp.float32)  # m^3 k d^2
+        xf = x.astype(jnp.float32)
+        lam = jnp.sum(xf * y)                          # <x|K|x> (x normalized)
+        resid = y - lam * xf
+        rnorm = jnp.sqrt(jnp.sum(resid * resid))
+        xnew = (resid / (rnorm + 1e-30)).astype(x.dtype)
+        return lam, rnorm, xnew
+
+    return step
+
+
+def dmrg_cell(name: str, mesh):
+    p = DMRG_CELLS[name]
+    m, d, k = p["m"], p["d"], p["k"]
+    dt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[p["dtype"]]
+    A = jax.ShapeDtypeStruct((m, k, m), dt)
+    W = jax.ShapeDtypeStruct((k, d, d, k), dt)
+    B = jax.ShapeDtypeStruct((m, k, m), dt)
+    x = jax.ShapeDtypeStruct((m, d, d, m), dt)
+    sh_env = NamedSharding(mesh, P(_data_axes(mesh), None, "model"))
+    sh_w = NamedSharding(mesh, P())
+    sh_x = NamedSharding(mesh, P(_data_axes(mesh), None, None, "model"))
+    repl = NamedSharding(mesh, P())
+    fn = dmrg_davidson_fn(m, d, k, store_dtype=dt)
+    return (
+        fn,
+        (A, W, W, B, x),
+        (sh_env, sh_w, sh_w, sh_env, sh_x),
+        (repl, repl, sh_x),
+        (),
+    )
+
+
+def _data_axes(mesh):
+    return ("pod", "data") if "pod" in mesh.shape else "data"
+
+
+# ------------------------------------------------- DMRG list-algorithm cell
+def empirical_block_dims(m: int, q: float, r: float, pad: int = 16):
+    """The paper's fitted block model: b_l = floor((m/q) r^l) (Table II).
+
+    ``pad`` rounds each block up to a multiple of the mesh-axis size so every
+    block 2-D-shards over the full mesh (§Perf iteration: unpadded, the
+    4915-dim block replicates — 2.9 GiB/chip; Cyclops handles arbitrary dims
+    with cyclic layouts, the TPU adaptation pads instead, ~+6% flops)."""
+    dims, b = [], m / q
+    while int(b) >= 1 and sum(dims) < m:
+        dims.append(max(pad, ((int(b) + pad - 1) // pad) * pad))
+        b *= r
+    return dims
+
+
+def dmrg_list_cell(name: str, mesh):
+    """The paper's *list* algorithm at production bond dimension: every
+    quantum-number block is its own distributed dense tensor (sharded over
+    the FULL mesh when its dims divide it — small tail blocks replicate,
+    exactly the heterogeneity the paper highlights in Fig. 2a), and the
+    Davidson matvec unrolls into one XLA program of per-block-pair GEMMs
+    (the O(N_b) BSP supersteps collapse into overlapped compute).
+
+    Block structure: one U(1) charge; bond sectors l = 0..N_b-1 with dims
+    b_l from the paper's empirical model and charges q_l = l; physical
+    charges +-1, so x blocks couple |q_l - q_r| <= 2 (banded, like the real
+    MPS) and env blocks are charge-diagonal.
+    """
+    base = DMRG_CELLS[name.replace("_list", "")]
+    m, d, k = base["m"], base["d"], base["k"]
+    qq, rr = (4, 0.6) if "spins" in name else (10, 0.65)
+    dims = empirical_block_dims(m, qq, rr)
+    nb = len(dims)
+    f32 = jnp.float32
+
+    def shard2(d0: int, d1: int):
+        """2-D shard a block when divisible; replicate the small tail."""
+        da = _data_axes(mesh)
+        dsz = int(np.prod([mesh.shape[a] for a in (da if isinstance(da, tuple) else (da,))]))
+        p0 = da if d0 % dsz == 0 else None
+        p1 = "model" if d1 % mesh.shape["model"] == 0 else None
+        return p0, p1
+
+    # ---- block lists (ShapeDtypeStructs) + shardings
+    A_blocks, A_sh = [], []      # env: (q, q): [b_q, k, b_q]
+    for i in range(nb):
+        A_blocks.append(jax.ShapeDtypeStruct((dims[i], k, dims[i]), f32))
+        p0, p1 = shard2(dims[i], dims[i])
+        A_sh.append(NamedSharding(mesh, P(p0, None, p1)))
+    # theta blocks (l, s1, s2, r): r-sector = l-sector + c(s1) + c(s2),
+    # phys charges c(0)=+1, c(1)=-1 -> banded structure like the real MPS
+    x_blocks, x_sh, x_keys = [], [], []
+    for i in range(nb):
+        for s1 in (0, 1):
+            for s2 in (0, 1):
+                j = i + (1 if s1 == 0 else -1) + (1 if s2 == 0 else -1)
+                if 0 <= j < nb:
+                    x_blocks.append(
+                        jax.ShapeDtypeStruct((dims[i], 1, 1, dims[j]), f32))
+                    p0, p1 = shard2(dims[i], dims[j])
+                    x_sh.append(NamedSharding(mesh, P(p0, None, None, p1)))
+                    x_keys.append((i, s1, s2, j))
+    # sector-diagonal MPO block (trivial MPO-bond charge): [k, 1, 1, k]
+    W = jax.ShapeDtypeStruct((k, 1, 1, k), f32)
+
+    def list_matvec(A_list, Wj, Wj1, B_list, xs):
+        """y = K x, list algorithm: enumerate compatible block 4-tuples."""
+        ys = []
+        for (i, s1, s2, j), xb in zip(x_keys, xs):
+            t = jnp.einsum("ikl,lstr->ikstr", A_list[i], xb)
+            t = jnp.einsum("ikstr,kcsn->ictrn", t, Wj)
+            t = jnp.einsum("ictrn,nftg->icfrg", t, Wj1)
+            y = jnp.einsum("icfrg,jgr->icfj", t, B_list[j])
+            ys.append(y)
+        lam = sum(jnp.sum(xb * yb) for xb, yb in zip(xs, ys))
+        rn = jnp.sqrt(sum(jnp.sum((yb - lam * xb) ** 2)
+                          for xb, yb in zip(xs, ys)))
+        xnew = tuple((yb - lam * xb) / (rn + 1e-30) for xb, yb in zip(xs, ys))
+        return lam, rn, xnew
+
+    repl = NamedSharding(mesh, P())
+    return (
+        list_matvec,
+        (tuple(A_blocks), W, W, tuple(A_blocks), tuple(x_blocks)),
+        (tuple(A_sh), repl, repl, tuple(A_sh), tuple(x_sh)),
+        (repl, repl, tuple(x_sh)),
+        (),
+    )

@@ -1,0 +1,125 @@
+"""End-to-end training driver with fault tolerance.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3_8b --smoke \
+        --steps 100 --checkpoint-every 20 --resume auto
+
+Features demonstrated on CPU (and unchanged on a pod): sharded train step,
+deterministic restorable data pipeline, async atomic checkpointing, resume
+(elastic — restore re-shards onto the current mesh), straggler monitoring,
+optional gradient compression with error feedback.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced config")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--checkpoint-dir", default="artifacts/ckpt")
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--resume", default="none", choices=["none", "auto"])
+    ap.add_argument("--compress", default=None, choices=[None, "bf16", "int8"])
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh-model", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    from repro import models
+    from repro.configs import get_config
+    from repro.launch.mesh import make_mesh
+    from repro.launch.sharding import batch_axes_for, tree_shardings
+    from repro.launch import specs
+    from repro.train.checkpoint import CheckpointManager
+    from repro.train.data import SyntheticLM
+    from repro.train.optim import OptConfig, init_opt_state, opt_state_axes
+    from repro.train.straggler import StepMonitor
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    n_dev = len(jax.devices())
+    mm = args.mesh_model
+    mesh = make_mesh((n_dev // mm, mm), ("data", "model"))
+    oc = OptConfig(lr=args.lr, warmup_steps=args.warmup,
+                   total_steps=max(args.steps, 1))
+
+    params, axes = models.init(cfg, jax.random.PRNGKey(args.seed))
+    opt = init_opt_state(params)
+    pshard = tree_shardings(params, axes, mesh)
+    oshard = tree_shardings(opt, opt_state_axes(axes), mesh)
+    params = {k: jax.device_put(v, pshard[k]) for k, v in params.items()}
+    opt = {k: jax.device_put(v, oshard[k]) for k, v in opt.items()}
+
+    data = SyntheticLM(cfg.vocab_size, args.seq_len, args.global_batch,
+                       seed=args.seed)
+    ckpt = CheckpointManager(f"{args.checkpoint_dir}/{cfg.name}", keep=3)
+    start_step = 0
+    if args.resume == "auto" and ckpt.latest_step() is not None:
+        shardings = {f"p/{k}": s for k, s in pshard.items()}
+        shardings.update({f"o/{k}": s for k, s in oshard.items()})
+        step0, arrays, meta = ckpt.restore(shardings=shardings)
+        params = {k[2:]: v for k, v in arrays.items() if k.startswith("p/")}
+        opt = {k[2:]: v for k, v in arrays.items() if k.startswith("o/")}
+        data.load_state_dict(meta["data"])
+        start_step = step0
+        print(f"resumed from step {step0}")
+
+    step_fn = specs.make_train_step(cfg, oc, compress=args.compress)
+    if args.compress:
+        from repro.train.compress import init_error_state
+        opt.update({f"err/{k}": v for k, v in init_error_state(params).items()})
+        oshard = dict(oshard, **{f"err/{k}": pshard[k] for k in params})
+
+    with jax.sharding.set_mesh(mesh):
+        jfn = jax.jit(step_fn, donate_argnums=(0, 1))
+        mon = StepMonitor()
+        extras = {}
+        if cfg.family == "vlm":
+            extras["patch_embeds"] = jnp.zeros(
+                (args.global_batch, cfg.n_patches, cfg.d_model), jnp.float32)
+        if cfg.family == "audio":
+            extras["enc_embeds"] = jnp.zeros(
+                (args.global_batch, cfg.enc_seq_len, cfg.d_model), jnp.float32)
+
+        losses = []
+        for step in range(start_step, args.steps):
+            batch = dict(next(data), **extras)
+            mon.start()
+            params, opt, metrics = jfn(params, opt, batch)
+            loss = float(metrics["loss"])
+            rep = mon.stop(step)
+            losses.append(loss)
+            if rep is not None:
+                print(f"straggler@{step}: {rep.seconds:.3f}s vs ewma "
+                      f"{rep.ewma:.3f}s (evict={rep.evict})")
+            if args.log_every and step % args.log_every == 0:
+                print(f"step {step:5d} loss {loss:.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"lr {float(metrics['lr']):.2e}", flush=True)
+            if args.checkpoint_every and (step + 1) % args.checkpoint_every == 0:
+                arrays = {f"p/{k}": v for k, v in params.items()}
+                arrays.update({f"o/{k}": v for k, v in opt.items()})
+                ckpt.save_async(step + 1, arrays,
+                                meta={"data": data.state_dict(),
+                                      "loss": loss})
+        ckpt.wait()
+        print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
+        return losses
+
+
+if __name__ == "__main__":
+    main()

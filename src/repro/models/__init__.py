@@ -1,0 +1,42 @@
+"""Unified model API over all assigned architectures.
+
+``init / loss_fn / decode_step / init_cache`` dispatch on cfg.family so the
+trainer, server, and dry-run treat every arch uniformly.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from . import lm as _lm
+from . import whisper as _wh
+
+
+def init(cfg, key) -> Tuple[Dict, Dict]:
+    if cfg.family == "audio":
+        return _wh.init_whisper(cfg, key)
+    return _lm.init_lm(cfg, key)
+
+
+def loss_fn(cfg, params: Dict, batch: Dict):
+    if cfg.family == "audio":
+        return _wh.whisper_loss(cfg, params, batch)
+    return _lm.lm_loss(cfg, params, batch)
+
+
+def forward(cfg, params: Dict, batch: Dict):
+    if cfg.family == "audio":
+        return _wh.whisper_forward(cfg, params, batch["enc_embeds"], batch["tokens"])
+    return _lm.lm_forward(cfg, params, batch["tokens"],
+                          patch_embeds=batch.get("patch_embeds"))
+
+
+def init_cache(cfg, batch: int, cache_len: int) -> Dict:
+    if cfg.family == "audio":
+        return _wh.init_whisper_cache(cfg, batch, cache_len)
+    return _lm.init_decode_cache(cfg, batch, cache_len)
+
+
+def decode_step(cfg, params: Dict, cache: Dict, token, pos):
+    if cfg.family == "audio":
+        return _wh.whisper_decode_step(cfg, params, cache, token, pos)
+    return _lm.lm_decode_step(cfg, params, cache, token, pos)

@@ -1,0 +1,158 @@
+"""Attention blocks: causal GQA (optionally RoPE), sliding-window local
+attention (RecurrentGemma), cross-attention (Whisper), and one-token decode
+against a KV cache.
+
+Training/prefill paths broadcast KV heads up to the query head count and
+apply TP sharding hints on the head axis, so the [*, H, S, S] logits tensor
+shards over "model" (the KV broadcast costs O(B*S*H*D) bytes — orders of
+magnitude below the logits it lets us shard).  Decode keeps the cache at
+n_kv_heads and uses the grouped form (logits are tiny at S_q=1).
+
+The jnp paths here are the canonical model definition (and what the dry-run
+lowers); ``repro.kernels.flash_attention`` provides the Pallas TPU kernel for
+the prefill hot-spot, validated against these in interpret mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import batch_axes, shard_hint
+
+NEG_INF = -2.0**30
+
+FLASH_THRESHOLD = 8192  # switch to query-chunked attention above this length
+FLASH_CHUNK = 512
+
+
+def _expand_kv(k, n_heads: int):
+    """[B,S,Hkv,D] -> [B,S,H,D] broadcast, sharded on the head axis."""
+    b, s, hkv, d = k.shape
+    if hkv != n_heads:
+        k = jnp.broadcast_to(
+            k[:, :, :, None, :], (b, s, hkv, n_heads // hkv, d)
+        ).reshape(b, s, n_heads, d)
+    return shard_hint(k, batch_axes(), None, "model", None)
+
+
+def causal_attention(q, k, v, *, local_window: int = 0):
+    """q: [B,S,H,D]; k,v: [B,S,Hkv,D]. Returns [B,S,H,D].
+
+    With ``local_window`` > 0 the mask is banded (sliding window); for long
+    sequences the computation is block-local: O(S*W) instead of O(S^2).
+    Long full-attention sequences take the query-chunked path so the [S,S]
+    logits matrix is never materialized (peak extra memory O(chunk*S))."""
+    if local_window and q.shape[1] > 2 * local_window:
+        return _windowed_attention(q, k, v, local_window)
+    if not local_window and q.shape[1] >= FLASH_THRESHOLD:
+        return _chunked_causal_attention(q, k, v, FLASH_CHUNK)
+    b, s, h, d = q.shape
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    q = shard_hint(q, batch_axes(), None, "model", None)
+    scale = 1.0 / np.sqrt(d)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    logits = shard_hint(logits, batch_axes(), "model", "model", None)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = kpos <= qpos
+    if local_window:
+        mask = jnp.logical_and(mask, kpos > qpos - local_window)
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def _chunked_causal_attention(q, k, v, chunk: int):
+    """lax.scan over query chunks; each chunk attends to the full key range
+    with a causal mask and a single softmax (the whole key axis is resident
+    per chunk, so no online rescaling is needed).  Peak transient memory is
+    [B, H, chunk, S] instead of [B, H, S, S]."""
+    b, s, h, d = q.shape
+    assert s % chunk == 0, (s, chunk)
+    nq = s // chunk
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    q = shard_hint(q, batch_axes(), None, "model", None)
+    qc = jnp.moveaxis(q.reshape(b, nq, chunk, h, d), 1, 0)  # [nq,B,c,h,d]
+    scale = 1.0 / np.sqrt(d)
+    kpos = jnp.arange(s)
+
+    def body(_, inp):
+        qi, idx = inp
+        logits = jnp.einsum("bqhd,bkhd->bhqk", qi, k).astype(jnp.float32) * scale
+        logits = shard_hint(logits, batch_axes(), "model", None, "model")
+        qpos = idx * chunk + jnp.arange(chunk)
+        mask = kpos[None, :] <= qpos[:, None]
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        o = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+        return None, o
+
+    _, outs = jax.lax.scan(body, None, (qc, jnp.arange(nq)))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s, h, d)
+
+
+def _windowed_attention(q, k, v, window: int):
+    """Block-local sliding-window attention: each query block of size W
+    attends to its own and the previous key block => O(S*2W*D)."""
+    b, s, h, d = q.shape
+    w = window
+    nb = (s + w - 1) // w
+    pad = nb * w - s
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    q = shard_hint(q, batch_axes(), None, "model", None)
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qb = q.reshape(b, nb, w, h, d)
+    kb = k.reshape(b, nb, w, h, d)
+    vb = v.reshape(b, nb, w, h, d)
+    kprev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    vprev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    k2 = jnp.concatenate([kprev, kb], axis=2)  # [B,nb,2w,h,d]
+    v2 = jnp.concatenate([vprev, vb], axis=2)
+    scale = 1.0 / np.sqrt(d)
+    logits = jnp.einsum("bnqhd,bnkhd->bnhqk", qb, k2).astype(jnp.float32) * scale
+    logits = shard_hint(logits, batch_axes(), None, "model", "model", None)
+    qpos = jnp.arange(w)[:, None] + w  # position on the 2w key axis
+    kpos = jnp.arange(2 * w)[None, :]
+    mask = (kpos <= qpos) & (kpos > qpos - w)
+    first_block = jnp.arange(nb)[:, None, None] == 0
+    valid = jnp.logical_and(mask[None], ~(first_block & (kpos[None] < w)))
+    logits = jnp.where(valid[:, None][None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bnhqk,bnkhd->bnqhd", probs, v2).reshape(b, nb * w, h, d)
+    return out[:, :s]
+
+
+def cross_attention(q, k, v):
+    """q: [B,Sq,H,D]; k,v: [B,Sk,Hkv,D]; full (non-causal) attention."""
+    b, sq, h, d = q.shape
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) / np.sqrt(d)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def decode_attention(q1, k_cache, v_cache, pos, *, local_window: int = 0):
+    """One-token decode: q1 [B,1,H,D], caches [B,S,Hkv,D]; attends to cache
+    positions <= pos (banded if local). pos: scalar int32.  Grouped form —
+    the cache stays at n_kv_heads, logits are [B,Hkv,rep,1,S]."""
+    b, s, hkv, d = k_cache.shape
+    h = q1.shape[2]
+    qg = q1.reshape(b, 1, hkv, h // hkv, d)
+    logits = jnp.einsum("bqhrd,bkhd->bhrqk", qg, k_cache).astype(jnp.float32)
+    logits = logits / np.sqrt(d)
+    kpos = jnp.arange(s)
+    mask = kpos <= pos
+    if local_window:
+        mask = jnp.logical_and(mask, kpos > pos - local_window)
+    logits = jnp.where(mask[None, None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q1.dtype)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", probs, v_cache)
+    return out.reshape(b, 1, h, d)

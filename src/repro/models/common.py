@@ -1,0 +1,173 @@
+"""Shared model building blocks, functional-JAX style.
+
+Parameters live in FLAT dicts keyed by slash paths ("layers/attn/wq"); a
+parallel dict maps each path to a tuple of *logical axis names* which
+``launch/mesh.py`` resolves to mesh axes (TP over "model", FSDP over "data").
+Layer-stacked parameters carry a leading "layers" axis and run under
+``jax.lax.scan`` so the HLO stays one-layer-sized for 80-layer models.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, jax.Array]
+Axes = Dict[str, Tuple[str, ...]]
+
+# mesh axes carrying the batch dim of activations. The default (pod, data)
+# leaves "model" for TP; the pure-FSDP hillclimb (EXPERIMENTS.md §Perf) sets
+# this to ("pod", "data", "model") so batch shards over the whole mesh and
+# no tensor parallelism occurs.
+BATCH_AXES = ("pod", "data")
+
+
+def batch_axes():
+    return BATCH_AXES
+
+
+def dtype_of(cfg):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+class Registry:
+    """Collects params + logical axes during init."""
+
+    def __init__(self, key: jax.Array):
+        self.params: Params = {}
+        self.axes: Axes = {}
+        self._key = key
+
+    def key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def add(self, path: str, shape, axes, scale=None, dtype=jnp.float32, zeros=False):
+        assert len(shape) == len(axes), (path, shape, axes)
+        if zeros:
+            v = jnp.zeros(shape, dtype)
+        else:
+            scale = scale if scale is not None else 1.0 / np.sqrt(shape[-2] if len(shape) > 1 else shape[-1])
+            v = (jax.random.normal(self.key(), shape, dtype) * float(scale)).astype(dtype)
+        self.params[path] = v
+        self.axes[path] = tuple(axes)
+        return v
+
+
+def sub(params: Params, prefix: str) -> Params:
+    """View of a flat dict under a path prefix (strips the prefix)."""
+    p = prefix + "/"
+    return {k[len(p):]: v for k, v in params.items() if k.startswith(p)}
+
+
+def shard_hint(x, *spec):
+    """with_sharding_constraint that degrades gracefully: applied only when
+    a mesh is in context (jax.sharding.set_mesh), and each named axis is
+    dropped unless it exists in the mesh and divides the dim size.  Keeps
+    model code mesh-agnostic — smoke tests see a no-op."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return x
+    if am is None or not am.axis_names:
+        return x
+    sizes = dict(zip(am.axis_names, am.axis_sizes))
+    resolved = []
+    used: set = set()
+    for dim, names in zip(x.shape, spec):
+        if names is None:
+            resolved.append(None)
+            continue
+        tup = names if isinstance(names, tuple) else (names,)
+        # keep only axes present in the mesh (e.g. "pod" on single-pod runs)
+        # and not already used — the same axis may be listed on several dims
+        # as a fallback chain (first divisible dim wins);
+        # then drop leading axes until the product divides the dim
+        tup = tuple(n for n in tup if n in sizes and n not in used)
+        while tup and dim % int(np.prod([sizes[n] for n in tup])) != 0:
+            tup = tup[1:]
+        used.update(tup)
+        if not tup:
+            resolved.append(None)
+        elif len(tup) == 1:
+            resolved.append(tup[0])
+        else:
+            resolved.append(tup)
+    from jax.sharding import PartitionSpec as P
+
+    return jax.lax.with_sharding_constraint(x, P(*resolved))
+
+
+def rms_norm(x, gamma, eps=1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + gamma.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, gamma, beta, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * gamma + beta
+    return out.astype(x.dtype)
+
+
+def rope(x, positions, theta: float):
+    """Rotary embeddings; x: [..., S, H, Dh], positions: [..., S]."""
+    if theta <= 0:
+        return x
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(-np.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs[None, :]  # [..., S, half]
+    cos = jnp.cos(ang)[..., :, None, :]  # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d_model: int) -> jax.Array:
+    pos = np.arange(seq_len)[:, None]
+    dim = np.arange(d_model // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * dim / d_model)
+    return jnp.asarray(
+        np.concatenate([np.sin(ang), np.cos(ang)], axis=-1), jnp.float32
+    )
+
+
+def act_hint(x):
+    """TP layout for an up-projected activation [..., S, F]: F over "model".
+    Pins the Megatron column-parallel layout so SPMD never falls back to
+    gathering the full weight."""
+    return shard_hint(x, *([batch_axes()] + [None] * (x.ndim - 2) + ["model"]))
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """SwiGLU MLP: down( silu(x@gate) * (x@up) )."""
+    g = jax.nn.silu(act_hint(jnp.einsum("...d,df->...f", x, w_gate)))
+    u = act_hint(jnp.einsum("...d,df->...f", x, w_up))
+    return jnp.einsum("...f,fd->...d", g * u, w_down)
+
+
+def gelu_mlp(x, w1, b1, w2, b2):
+    h = jax.nn.gelu(act_hint(jnp.einsum("...d,df->...f", x, w1) + b1))
+    return jnp.einsum("...f,fd->...d", h, w2) + b2
+
+
+def cross_entropy_loss(logits, labels, mask=None, z_loss: float = 0.0):
+    """Mean token CE in float32, optional masking and z-loss."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    if mask is None:
+        return jnp.mean(loss)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(loss * mask) / jnp.maximum(jnp.sum(mask), 1.0)

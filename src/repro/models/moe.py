@@ -1,0 +1,121 @@
+"""Mixture-of-experts FFN with sort-based capacity dispatch.
+
+The expert dimension is the LM-side analogue of the paper's quantum-number
+blocks (DESIGN.md Sec. 4): tokens route to blocks, and we provide the same
+two execution strategies the paper contrasts:
+
+* ``dispatch="sorted"`` (default, the *sparse-sparse* analogue): within each
+  sequence, token slots are sorted by expert id and packed into a static
+  [E, C, d] buffer (C = ceil(S*k/E * capacity_factor)); the expert FFN is one
+  batched GEMM — a single "contraction call" with precomputed output
+  structure, flop count proportional to ACTIVE parameters only.
+* ``dispatch="dense"`` (the *sparse-dense* analogue): every token through
+  every expert, masked combine.  Dense-GEMM-friendly but E/k times the
+  flops; used in tests as the oracle.
+
+Dispatch is LOCAL to the batch dim (each sequence sorts/packs its own S*k
+slots), so under data parallelism no cross-chip sort or scatter ever happens;
+experts shard over "model" (EP) when the expert count divides it, else the
+expert FFN width shards (TP fallback) — see launch/sharding.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import batch_axes, shard_hint
+
+# EP (experts over "model", when divisible) vs TP (expert-ff over "model")
+# activation layout — §Perf hillclimb knob; EP is the default/baseline.
+EXPERT_PARALLEL = True
+
+
+def _buf_hint(x):
+    if EXPERT_PARALLEL:
+        return shard_hint(x, batch_axes(), "model", None, None)
+    return shard_hint(x, batch_axes(), None, None, None)
+
+
+def _h_hint(x):
+    if EXPERT_PARALLEL:
+        return shard_hint(x, batch_axes(), "model", None, "model")
+    return shard_hint(x, batch_axes(), None, None, "model")
+
+
+def moe_ffn(x, w_router, w_gate, w_up, w_down, *, top_k: int,
+            capacity_factor: float = 1.25, dispatch: str = "sorted"):
+    """x: [B,S,D]; w_router: [D,E]; w_gate/up: [E,D,F]; w_down: [E,F,D]."""
+    b, s, d = x.shape
+    e = w_router.shape[1]
+    logits = jnp.einsum("bsd,de->bse", x, w_router).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_i = jax.lax.top_k(probs, top_k)           # [B,S,k]
+    gate_w = (gate_w / jnp.sum(gate_w, -1, keepdims=True)).astype(x.dtype)
+
+    if dispatch == "dense":
+        h = jax.nn.silu(jnp.einsum("bsd,edf->bsef", x, w_gate))
+        h = h * jnp.einsum("bsd,edf->bsef", x, w_up)
+        y_all = jnp.einsum("bsef,efd->bsed", h, w_down)    # [B,S,E,D]
+        onehot = jax.nn.one_hot(gate_i, e, dtype=x.dtype)  # [B,S,k,E]
+        comb = jnp.einsum("bsk,bske->bse", gate_w, onehot)
+        return jnp.einsum("bse,bsed->bsd", comb, y_all)
+
+    # ---- sorted dispatch, local per sequence ------------------------------
+    cap = int(np.ceil(s * top_k / e * capacity_factor))
+    n_slots = s * top_k
+    flat_e = gate_i.reshape(b, n_slots)
+    flat_t = jnp.tile(jnp.repeat(jnp.arange(s), top_k), (1,))  # [n_slots]
+    flat_w = gate_w.reshape(b, n_slots)
+
+    order = jnp.argsort(flat_e, axis=1)                    # stable per row
+    se = jnp.take_along_axis(flat_e, order, axis=1)        # [B, n_slots]
+    st = jnp.take(flat_t, order)                           # token of each slot
+    sw = jnp.take_along_axis(flat_w, order, axis=1)
+
+    # rank within expert group = slot index - group start offset
+    starts = jax.vmap(lambda row: jnp.searchsorted(row, jnp.arange(e)))(se)
+    rank = jnp.arange(n_slots)[None, :] - jnp.take_along_axis(starts, se, axis=1)
+    keep = rank < cap                                      # overflow drops
+    dest = jnp.where(keep, se * cap + rank, e * cap)       # e*cap = trash row
+
+    # vmapped row-wise gather/scatter: indices stay [B, n_slots] (never
+    # broadcast over D), lowering to gather/scatter with batching dims that
+    # SPMD shards cleanly on the batch axis
+    gather_rows = jax.vmap(lambda rows, idx: jnp.take(rows, idx, axis=0))
+    xs = gather_rows(x, st)                                # [B, n_slots, D]
+
+    def scatter_rows(dst, idx, val):
+        return dst.at[idx].set(val)
+
+    buf = jax.vmap(scatter_rows)(
+        jnp.zeros((b, e * cap + 1, d), x.dtype), dest,
+        xs * keep[..., None].astype(x.dtype),
+    )
+    buf = buf[:, :-1].reshape(b, e, cap, d)
+    buf = _buf_hint(buf)
+
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, w_gate))
+    h = _h_hint(h)
+    h = h * jnp.einsum("becd,edf->becf", buf, w_up)
+    y = jnp.einsum("becf,efd->becd", h, w_down)
+    y = _buf_hint(y)
+    y = y.reshape(b, e * cap, d)
+
+    yg = gather_rows(y, jnp.minimum(dest, e * cap - 1))
+    yg = yg * (keep[..., None] * sw[..., None]).astype(x.dtype)
+    out = jax.vmap(lambda idx, val: jnp.zeros((s, d), x.dtype).at[idx].add(val))(
+        st, yg
+    )
+    return out
+
+
+def aux_load_balance_loss(logits: jax.Array, top_k: int) -> jax.Array:
+    """Switch-style load-balance auxiliary loss (mean_e f_e * p_e * E)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    e = probs.shape[-1]
+    _, idx = jax.lax.top_k(probs, top_k)
+    hard = jnp.sum(jax.nn.one_hot(idx, e), axis=-2)  # [T,E]
+    f = jnp.mean(hard, axis=tuple(range(hard.ndim - 1)))
+    p = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    return e * jnp.sum(f * p) / top_k

@@ -1,0 +1,86 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block: W_x -> causal depthwise conv1d(width 4) -> RG-LRU, gated by a GeLU
+branch, projected back.  The RG-LRU diagonal recurrence
+
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+    log a_t = -c * softplus(Lambda) * r_t,   c = 8
+
+runs as a jax.lax.associative_scan over time (fully parallel, O(T log T)
+elementwise work on a [T, d_rnn] state — no quadratic term, which is what
+makes the arch long_500k-eligible).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+RG_C = 8.0
+
+
+def rglru_params(reg, prefix, d, d_rnn, conv_width=4, dtype=jnp.float32):
+    p = prefix
+    reg.add(f"{p}/w_x", (d, d_rnn), ("embed", "rnn"), dtype=dtype)
+    reg.add(f"{p}/w_gate", (d, d_rnn), ("embed", "rnn"), dtype=dtype)
+    reg.add(f"{p}/w_out", (d_rnn, d), ("rnn", "embed"), dtype=dtype)
+    reg.add(f"{p}/conv_w", (conv_width, d_rnn), ("conv", "rnn"), dtype=dtype,
+            scale=0.5)
+    reg.add(f"{p}/conv_b", (d_rnn,), ("rnn",), zeros=True, dtype=dtype)
+    reg.add(f"{p}/w_a", (d_rnn, d_rnn), ("rnn", "rnn2"), dtype=dtype, scale=1e-2)
+    reg.add(f"{p}/b_a", (d_rnn,), ("rnn",), zeros=True, dtype=dtype)
+    reg.add(f"{p}/w_i", (d_rnn, d_rnn), ("rnn", "rnn2"), dtype=dtype, scale=1e-2)
+    reg.add(f"{p}/b_i", (d_rnn,), ("rnn",), zeros=True, dtype=dtype)
+    reg.add(f"{p}/lam", (d_rnn,), ("rnn",), zeros=True, dtype=dtype)
+
+
+def _conv1d_causal(x, w, b, state=None):
+    """Depthwise causal conv; x [B,T,C], w [W,C]. state: [B,W-1,C] history."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(width))
+    return out + b, xp[:, -(width - 1):]  # (out, new conv state)
+
+
+def _rglru_gates(p, u):
+    r = jax.nn.sigmoid(jnp.einsum("...c,cd->...d", u, p["w_a"]) + p["b_a"])
+    i = jax.nn.sigmoid(jnp.einsum("...c,cd->...d", u, p["w_i"]) + p["b_i"])
+    log_a = (-RG_C * jax.nn.softplus(p["lam"]) * r).astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * (i * u).astype(jnp.float32)
+    return a, gated
+
+
+def rglru_block(p, x, h0=None, conv_state=None):
+    """x: [B,T,D] -> (out [B,T,D], (h_last [B,d_rnn], conv_state))."""
+    u = jnp.einsum("btd,dc->btc", x, p["w_x"])
+    u, conv_state_new = _conv1d_causal(u, p["conv_w"], p["conv_b"], conv_state)
+    a, gated = _rglru_gates(p, u)
+
+    if h0 is not None:  # fold carried state into step 0: h_0' contribution
+        gated = gated.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_sc, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    h = h.astype(x.dtype)
+    gate = jax.nn.gelu(jnp.einsum("btd,dc->btc", x, p["w_gate"]))
+    out = jnp.einsum("btc,cd->btd", h * gate, p["w_out"])
+    return out, (h[:, -1], conv_state_new)
+
+
+def rglru_decode(p, x1, h, conv_state):
+    """One-token step. x1 [B,1,D]; h [B,d_rnn]; conv_state [B,W-1,d_rnn]."""
+    u = jnp.einsum("btd,dc->btc", x1, p["w_x"])
+    u, conv_state_new = _conv1d_causal(u, p["conv_w"], p["conv_b"], conv_state)
+    a, gated = _rglru_gates(p, u)
+    h_new = a[:, 0] * h.astype(jnp.float32) + gated[:, 0]
+    gate = jax.nn.gelu(jnp.einsum("btd,dc->btc", x1, p["w_gate"]))
+    out = jnp.einsum("btc,cd->btd", h_new[:, None].astype(x1.dtype) * gate, p["w_out"])
+    return out, (h_new, conv_state_new)

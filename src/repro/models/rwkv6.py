@@ -1,0 +1,191 @@
+"""RWKV6 (Finch) time-mix and channel-mix, with data-dependent decay
+[arXiv:2404.05892].
+
+Training path is the CHUNKED linear-attention form: within a chunk of length
+C the pairwise decay matrix A[t,i,n] = exp(L[t-1,n] - L[i,n]) (i<t) is built
+in log space — L is the inclusive cumulative log-decay, monotonically
+decreasing, so every exponent is <= 0 and the computation is overflow-free
+without FLA-style renormalization tricks.  Cross-chunk state S [N_k, N_v]
+carries through a lax.scan.  ``repro.kernels.rwkv6_scan`` is the Pallas TPU
+version of the same algorithm.
+
+Decode path is the O(1) recurrence: out = r.(S + u*(k^T v)); S' = w*S + k^T v.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+CHUNK = 128
+
+
+def _lerp(x, xprev, mu):
+    return x + (xprev - x) * mu
+
+
+def _token_shift(x, x_last=None):
+    """Previous-token x; zeros (or carried state) at position 0."""
+    first = jnp.zeros_like(x[:, :1]) if x_last is None else x_last[:, None]
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def time_mix_params(reg, prefix, d, n_heads, head_dim, lora=64, dtype=jnp.float32):
+    p = prefix
+    for mu in ("mu_x", "mu_w", "mu_k", "mu_v", "mu_r", "mu_g"):
+        reg.add(f"{p}/{mu}", (d,), ("embed",), zeros=True, dtype=dtype)
+    for w in ("w_r", "w_k", "w_v", "w_g", "w_o"):
+        reg.add(f"{p}/{w}", (d, d), ("embed", "heads"), dtype=dtype)
+    reg.add(f"{p}/w0", (d,), ("heads",), zeros=True, dtype=dtype)
+    reg.add(f"{p}/w_lora_a", (d, lora), ("embed", "lora"), dtype=dtype)
+    reg.add(f"{p}/w_lora_b", (lora, d), ("lora", "heads"), dtype=dtype, scale=1e-2)
+    reg.add(f"{p}/u", (n_heads, head_dim), ("heads", "head_dim"), zeros=True, dtype=dtype)
+    reg.add(f"{p}/gn_g", (d,), ("heads",), zeros=True, dtype=dtype)
+    reg.add(f"{p}/gn_b", (d,), ("heads",), zeros=True, dtype=dtype)
+
+
+def channel_mix_params(reg, prefix, d, d_ff, dtype=jnp.float32):
+    p = prefix
+    reg.add(f"{p}/mu_k", (d,), ("embed",), zeros=True, dtype=dtype)
+    reg.add(f"{p}/mu_r", (d,), ("embed",), zeros=True, dtype=dtype)
+    reg.add(f"{p}/w_k", (d, d_ff), ("embed", "ff"), dtype=dtype)
+    reg.add(f"{p}/w_v", (d_ff, d), ("ff", "embed"), dtype=dtype)
+    reg.add(f"{p}/w_r", (d, d), ("embed", "heads"), dtype=dtype)
+
+
+def _project(p, x, xprev):
+    """Shared projection math for train & decode: returns r,k,v,g,logw."""
+    xw = _lerp(x, xprev, p["mu_w"])
+    xk = _lerp(x, xprev, p["mu_k"])
+    xv = _lerp(x, xprev, p["mu_v"])
+    xr = _lerp(x, xprev, p["mu_r"])
+    xg = _lerp(x, xprev, p["mu_g"])
+    r = jnp.einsum("...d,dk->...k", xr, p["w_r"])
+    k = jnp.einsum("...d,dk->...k", xk, p["w_k"])
+    v = jnp.einsum("...d,dk->...k", xv, p["w_v"])
+    g = jax.nn.silu(jnp.einsum("...d,dk->...k", xg, p["w_g"]))
+    # data-dependent decay (the Finch contribution): per-channel, per-token
+    dd = jnp.einsum(
+        "...l,ld->...d", jnp.tanh(jnp.einsum("...d,dl->...l", xw, p["w_lora_a"])),
+        p["w_lora_b"],
+    )
+    logw = -jnp.exp(jnp.clip(p["w0"] + dd, -8.0, 6.0).astype(jnp.float32))
+    return r, k, v, g, logw
+
+
+def _group_norm(x, g, b, n_heads, eps=1e-5):
+    """Per-head LayerNorm of the wkv output (RWKV GroupNorm(H))."""
+    b_, t, d = x.shape
+    xh = x.reshape(b_, t, n_heads, d // n_heads).astype(jnp.float32)
+    mu = jnp.mean(xh, -1, keepdims=True)
+    var = jnp.var(xh, -1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(b_, t, d) * (1.0 + g) + b).astype(x.dtype)
+
+
+def time_mix(p, x, n_heads: int, head_dim: int, state=None, x_last=None,
+             chunk: int = CHUNK):
+    """x: [B,T,D]. Returns (out [B,T,D], (state [B,H,N,N], x_last [B,D]))."""
+    bsz, t, d = x.shape
+    h, n = n_heads, head_dim
+    xprev = _token_shift(x, x_last)
+    r, k, v, g, logw = _project(p, x, xprev)
+
+    pad = (-t) % chunk
+    if pad:
+        r, k, v = (jnp.pad(a, ((0, 0), (0, pad), (0, 0))) for a in (r, k, v))
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0)))
+    tt = t + pad
+    nc = tt // chunk
+
+    def to_chunks(a):
+        return a.reshape(bsz, nc, chunk, h, n).transpose(1, 0, 3, 2, 4)  # [nc,B,H,C,N]
+
+    # r/k/v stay in model dtype (bf16 in production): the [C,C,N] pairwise
+    # tensor A inherits it, halving the dominant HBM traffic (§Perf); all
+    # contractions still accumulate in f32 via preferred_element_type
+    rc, kc, vc = to_chunks(r), to_chunks(k), to_chunks(v)
+    lw = logw.reshape(bsz, nc, chunk, h, n).transpose(1, 0, 3, 2, 4)
+    u = p["u"].astype(jnp.float32)  # [H,N]
+
+    s0 = (jnp.zeros((bsz, h, n, n), jnp.float32) if state is None
+          else state.astype(jnp.float32))
+
+    # nested remat: without it, differentiating the chunk scan saves the
+    # [nc,B,H,C,C,N] pairwise decay tensor for EVERY chunk (10 GiB/chip at
+    # 4k x 40H); rematerializing per chunk keeps only the [B,H,N,N] carries
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def body_remat(s, inp):
+        r_, k_, v_, lw_ = inp                       # [B,H,C,N]
+        dt = r_.dtype
+        L = jnp.cumsum(lw_, axis=2)                 # inclusive cumulative log decay
+        Lprev = L - lw_                             # L_{t-1} (exclusive), row t
+        # carry-in: r_t * exp(L_{t-1}) @ S
+        rdec = r_.astype(jnp.float32) * jnp.exp(Lprev)
+        carry_out = jnp.einsum("bhtn,bhnm->bhtm", rdec, s)
+        # intra-chunk: A[t,i,n] = exp(L[t-1,n] - L[i,n]), i < t  (always <= 0)
+        expo = Lprev[:, :, :, None, :] - L[:, :, None, :, :]
+        A = jnp.exp(jnp.clip(expo, -60.0, 0.0)).astype(dt)
+        mask = (jnp.arange(chunk)[:, None] > jnp.arange(chunk)[None, :])
+        scores = jnp.einsum("bhtn,bhin,bhtin->bhti", r_, k_, A,
+                            preferred_element_type=jnp.float32) * mask
+        intra = jnp.einsum("bhti,bhim->bhtm", scores.astype(dt), v_,
+                           preferred_element_type=jnp.float32)
+        # u bonus (i == t)
+        bonus = jnp.einsum("bhtn,bhtn,hn->bht", r_.astype(jnp.float32),
+                           k_.astype(jnp.float32), u)
+        out = carry_out + intra + bonus[..., None] * v_.astype(jnp.float32)
+        # state update: S' = diag(exp(L_C)) S + sum_i exp(L_C - L_i) k_i (x) v_i
+        Lc = L[:, :, -1:, :]                        # [B,H,1,N]
+        kdec = (k_.astype(jnp.float32) * jnp.exp(Lc - L)).astype(dt)
+        s_new = s * jnp.exp(Lc[:, :, 0, :])[..., None] + jnp.einsum(
+            "bhin,bhim->bhnm", kdec, v_, preferred_element_type=jnp.float32
+        )
+        return s_new, out
+
+    def body(s, inp):
+        return body_remat(s, inp)
+
+    s_fin, outs = jax.lax.scan(body, s0, (rc, kc, vc, lw))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(bsz, tt, d)[:, :t]
+    out = _group_norm(out, p["gn_g"], p["gn_b"], h) * g
+    out = jnp.einsum("btd,dk->btk", out.astype(x.dtype), p["w_o"])
+    return out, (s_fin.astype(jnp.float32), x[:, -1])
+
+
+def time_mix_decode(p, x1, state, x_last, n_heads: int, head_dim: int):
+    """One-token decode. x1: [B,1,D]; state [B,H,N,N]; x_last [B,D]."""
+    bsz, _, d = x1.shape
+    h, n = n_heads, head_dim
+    xprev = x_last[:, None]
+    r, k, v, g, logw = _project(p, x1, xprev)
+    rh = r.reshape(bsz, h, n).astype(jnp.float32)
+    kh = k.reshape(bsz, h, n).astype(jnp.float32)
+    vh = v.reshape(bsz, h, n).astype(jnp.float32)
+    w = jnp.exp(logw.reshape(bsz, h, n))
+    u = p["u"].astype(jnp.float32)
+    kv = jnp.einsum("bhn,bhm->bhnm", kh, vh)
+    out = jnp.einsum("bhn,bhnm->bhm", rh, state + u[None, :, :, None] * kv)
+    s_new = state * w[..., None] + kv
+    out = out.reshape(bsz, 1, d)
+    out = _group_norm(out, p["gn_g"], p["gn_b"], h) * g
+    out = jnp.einsum("btd,dk->btk", out.astype(x1.dtype), p["w_o"])
+    return out, (s_new, x1[:, 0])
+
+
+def channel_mix(p, x, x_last=None):
+    """Squared-ReLU channel mix. Returns (out, new x_last)."""
+    xprev = _token_shift(x, x_last)
+    xk = _lerp(x, xprev, p["mu_k"])
+    xr = _lerp(x, xprev, p["mu_r"])
+    k = jnp.square(jax.nn.relu(jnp.einsum("...d,df->...f", xk, p["w_k"])))
+    kv = jnp.einsum("...f,fd->...d", k, p["w_v"])
+    out = jax.nn.sigmoid(jnp.einsum("...d,dk->...k", xr, p["w_r"])) * kv
+    return out, x[:, -1]
+
+
+def channel_mix_decode(p, x1, x_last):
+    out, new_last = channel_mix(p, x1, x_last)
+    return out, new_last

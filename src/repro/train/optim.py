@@ -1,0 +1,86 @@
+"""AdamW + gradient clipping + LR schedules, functional (no optax dependency).
+
+Optimizer state is a flat dict mirroring the param dict ("m/<path>",
+"v/<path>", "step"), so the same logical-axis sharding rules apply to the
+moments as to the parameters (fully sharded optimizer state under FSDP).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+def init_opt_state(params: Dict) -> Dict:
+    st = {"step": jnp.zeros((), jnp.int32)}
+    for k, v in params.items():
+        st[f"m/{k}"] = jnp.zeros_like(v, dtype=jnp.float32)
+        st[f"v/{k}"] = jnp.zeros_like(v, dtype=jnp.float32)
+    return st
+
+
+def opt_state_axes(axes: Dict) -> Dict:
+    out = {"step": ()}
+    for k, a in axes.items():
+        out[f"m/{k}"] = a
+        out[f"v/{k}"] = a
+    return out
+
+
+def lr_at(oc: OptConfig, step):
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(oc.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - oc.warmup_steps) / jnp.maximum(oc.total_steps - oc.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return oc.lr * warm * (oc.min_lr_ratio + (1 - oc.min_lr_ratio) * cos)
+
+
+def global_norm(grads: Dict):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in grads.values())
+    )
+
+
+def adamw_update(
+    oc: OptConfig, params: Dict, grads: Dict, state: Dict
+) -> Tuple[Dict, Dict, Dict]:
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, oc.grad_clip / (gnorm + 1e-9))
+    lr = lr_at(oc, step)
+    b1c = 1 - oc.beta1 ** step.astype(jnp.float32)
+    b2c = 1 - oc.beta2 ** step.astype(jnp.float32)
+
+    new_params, new_state = {}, {"step": step}
+    for k, p in params.items():
+        g = grads[k].astype(jnp.float32) * clip
+        m = oc.beta1 * state[f"m/{k}"] + (1 - oc.beta1) * g
+        v = oc.beta2 * state[f"v/{k}"] + (1 - oc.beta2) * jnp.square(g)
+        upd = (m / b1c) / (jnp.sqrt(v / b2c) + oc.eps)
+        decay = oc.weight_decay if p.ndim > 1 else 0.0  # no decay on norms/biases
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (upd + decay * pf)
+        new_params[k] = pf.astype(p.dtype)
+        new_state[f"m/{k}"] = m
+        new_state[f"v/{k}"] = v
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

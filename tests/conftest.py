@@ -1,0 +1,11 @@
+import os
+import sys
+
+# 64-bit for DMRG numerics; LM-model code passes explicit float32/bfloat16
+# dtypes, so this does not change the transformer stack's behavior.
+os.environ.setdefault("JAX_ENABLE_X64", "1")
+# NOTE: deliberately NOT setting --xla_force_host_platform_device_count here:
+# smoke tests and benches must see the single real CPU device; only
+# launch/dryrun.py (run as its own process) requests 512 placeholder devices.
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,71 @@
+"""Config sanity: every assigned arch resolves, param counts land in the
+right ballpark (name vs. approximate count), shapes gate correctly."""
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, all_configs, get_config
+
+# (arch, expected params in billions, tolerance factor)
+EXPECTED_B = {
+    "llama3_8b": (8.0, 0.2),
+    "codeqwen15_7b": (7.2, 0.25),
+    "qwen15_110b": (111.0, 0.15),
+    "granite_3_2b": (2.5, 0.3),
+    "pixtral_12b": (12.0, 0.25),
+    "qwen2_moe_a27b": (14.3, 0.3),
+    # assignment pins 48L x 64e (HF Moonlight is 27L/16B); 48L gives ~29B
+    "moonshot_v1_16b_a3b": (28.9, 0.15),
+    "rwkv6_3b": (3.1, 0.4),
+    "recurrentgemma_2b": (2.7, 0.4),
+}
+
+
+def test_all_archs_resolve():
+    cfgs = all_configs()
+    assert len(cfgs) == 10
+    for a, c in cfgs.items():
+        assert c.name == a
+        assert c.d_model > 0 and c.n_layers > 0 and c.vocab_size > 0
+
+
+@pytest.mark.parametrize("arch,exp", list(EXPECTED_B.items()))
+def test_param_counts_ballpark(arch, exp):
+    target, tol = exp
+    n = get_config(arch).param_count() / 1e9
+    assert abs(n - target) / target < tol, f"{arch}: {n:.2f}B vs {target}B"
+
+
+def test_moe_active_counts():
+    for arch, active_b in (("qwen2_moe_a27b", 2.7), ("moonshot_v1_16b_a3b", 4.8)):
+        n = get_config(arch).active_param_count() / 1e9
+        assert abs(n - active_b) / active_b < 0.5, f"{arch}: {n:.2f}B active"
+
+
+def test_shape_gates():
+    # long_500k only for sub-quadratic archs
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        ok, why = cfg.shape_supported("long_500k")
+        assert ok == cfg.sub_quadratic, (a, why)
+        assert cfg.shape_supported("train_4k")[0]
+    assert sum(get_config(a).sub_quadratic for a in ARCH_IDS) == 2
+
+
+def test_smoke_configs_are_small():
+    for a in ARCH_IDS:
+        s = get_config(a).smoke()
+        assert s.param_count() < 5e6, a
+        assert s.d_model <= 64 and s.vocab_size <= 128
+
+
+def test_40_cells_accounting():
+    """10 archs x 4 shapes = 40 assigned cells; 32 run + 8 documented skips."""
+    runnable = skipped = 0
+    for a in ARCH_IDS:
+        for sh in SHAPES:
+            ok, why = get_config(a).shape_supported(sh)
+            if ok:
+                runnable += 1
+            else:
+                skipped += 1
+                assert "sub-quadratic" in why
+    assert runnable == 32 and skipped == 8

@@ -1,0 +1,61 @@
+"""Observable measurement vs exact diagonalization."""
+import numpy as np
+import pytest
+
+from repro.core import run_dmrg
+from repro.core.ed import build_dense_hamiltonian, state_charges_vector
+from repro.core.measure import correlation, site_expectation
+from repro.core.models import heisenberg_j1j2_terms
+from repro.core.siteops import spin_half_space
+
+
+@pytest.fixture(scope="module")
+def ground_state():
+    sp = spin_half_space()
+    terms = heisenberg_j1j2_terms(3, 2, 1.0, 0.5, cylinder=False)
+    n = 6
+    res = run_dmrg(sp, terms, n, bond_schedule=(8, 16), sweeps_per_bond=2,
+                   davidson_iters=6)
+    # ED ground state in the Sz=0 sector for reference observables
+    H = build_dense_hamiltonian(sp, terms, n)
+    mask = np.all(state_charges_vector(sp, n) == np.array((0,)), axis=1)
+    Hs = H[np.ix_(mask, mask)]
+    w, v = np.linalg.eigh(Hs)
+    full = np.zeros(2**n)
+    full[mask] = v[:, 0]
+    return sp, res.mps, full, n
+
+
+def _ed_op(op, site, n, d=2):
+    m = np.ones((1, 1))
+    for s in range(n):
+        m = np.kron(m, op if s == site else np.eye(d))
+    return m
+
+
+def test_sz_expectation_matches_ed(ground_state):
+    sp, mps, psi, n = ground_state
+    sz = np.asarray(sp.ops["Sz"])
+    for site in (0, 2, 5):
+        want = float(psi @ _ed_op(sz, site, n) @ psi)
+        got = site_expectation(mps, sp, "Sz", site)
+        np.testing.assert_allclose(got, want, atol=1e-7)
+
+
+def test_szsz_correlation_matches_ed(ground_state):
+    sp, mps, psi, n = ground_state
+    sz = np.asarray(sp.ops["Sz"])
+    for i, j in ((0, 1), (1, 4), (0, 5)):
+        want = float(psi @ (_ed_op(sz, i, n) @ _ed_op(sz, j, n)) @ psi)
+        got = correlation(mps, sp, "Sz", "Sz", i, j)
+        np.testing.assert_allclose(got, want, atol=1e-7)
+
+
+def test_spsm_correlation_matches_ed(ground_state):
+    """Charged-operator string: S+_i S-_j (tests charged environments)."""
+    sp, mps, psi, n = ground_state
+    spo, smo = np.asarray(sp.ops["S+"]), np.asarray(sp.ops["S-"])
+    for i, j in ((0, 3), (2, 5)):
+        want = float(psi @ (_ed_op(spo, i, n) @ _ed_op(smo, j, n)) @ psi)
+        got = correlation(mps, sp, "S+", "S-", i, j)
+        np.testing.assert_allclose(got, want, atol=1e-7)

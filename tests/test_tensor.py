@@ -1,0 +1,146 @@
+"""Block-sparse tensor substrate: charge conservation, algorithm equivalence,
+SVD truncation invariants.  Property tests use hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.tensor import (
+    BlockSparseTensor,
+    IN,
+    Index,
+    OUT,
+    contract,
+    contract_block_csr,
+    contract_dense,
+    svd_split,
+)
+from repro.tensor.blocksparse import flip_flow
+
+
+def rand_index(rng, nq=1, max_sectors=3, max_dim=4, flow=OUT):
+    ns = rng.integers(1, max_sectors + 1)
+    charges = rng.choice(np.arange(-2, 3), size=(8, nq), replace=True)
+    charges = [tuple(int(c) for c in q) for q in charges]
+    uniq = []
+    for q in charges:
+        if q not in uniq:
+            uniq.append(q)
+    uniq = uniq[:ns]
+    return Index(tuple((q, int(rng.integers(1, max_dim + 1))) for q in uniq), flow)
+
+
+def rand_pair(seed, nq=1):
+    """Random contractible (A, B) pair sharing one contracted index."""
+    rng = np.random.default_rng(seed)
+    shared = rand_index(rng, nq=nq)
+    ia = rand_index(rng, nq=nq)
+    ib = rand_index(rng, nq=nq)
+    A = BlockSparseTensor.random([ia, shared], key=jax.random.PRNGKey(seed))
+    B = BlockSparseTensor.random([shared.dual(), ib], key=jax.random.PRNGKey(seed + 1))
+    return A, B
+
+
+class TestChargeConservation:
+    @given(seed=st.integers(0, 200), nq=st.integers(1, 2))
+    @settings(max_examples=25, deadline=None)
+    def test_contract_conserves_charge(self, seed, nq):
+        A, B = rand_pair(seed, nq)
+        C = contract(A, B, axes=((1,), (0,)))
+        C.check()
+
+    @given(seed=st.integers(0, 200))
+    @settings(max_examples=10, deadline=None)
+    def test_flip_flow_invariant(self, seed):
+        A, B = rand_pair(seed)
+        C1 = contract(A, B, axes=((1,), (0,))).to_dense()
+        A2, B2 = flip_flow(A, 1), flip_flow(B, 0)
+        C2 = contract(A2, B2, axes=((1,), (0,))).to_dense()
+        np.testing.assert_allclose(np.asarray(C1), np.asarray(C2), atol=1e-12)
+
+
+class TestAlgorithmEquivalence:
+    """The paper's three contraction algorithms must agree exactly."""
+
+    @given(seed=st.integers(0, 500), nq=st.integers(1, 2))
+    @settings(max_examples=25, deadline=None)
+    def test_list_vs_dense(self, seed, nq):
+        A, B = rand_pair(seed, nq)
+        C1 = contract(A, B, axes=((1,), (0,))).to_dense()
+        C2 = contract_dense(A, B, axes=((1,), (0,))).to_dense()
+        np.testing.assert_allclose(np.asarray(C1), np.asarray(C2), atol=1e-12)
+
+    @given(seed=st.integers(0, 500))
+    @settings(max_examples=10, deadline=None)
+    def test_list_vs_block_csr(self, seed):
+        A, B = rand_pair(seed)
+        C1 = contract(A, B, axes=((1,), (0,))).to_dense()
+        C3 = contract_block_csr(A, B, axes=((1,), (0,)), interpret=True).to_dense()
+        np.testing.assert_allclose(np.asarray(C1), np.asarray(C3), atol=1e-10)
+
+    def test_higher_order(self):
+        rng = np.random.default_rng(7)
+        i1, i2, i3 = (rand_index(rng) for _ in range(3))
+        A = BlockSparseTensor.random([i1, i2, i3], key=jax.random.PRNGKey(0))
+        B = BlockSparseTensor.random(
+            [i2.dual(), i3.dual(), i1], key=jax.random.PRNGKey(1)
+        )
+        ax = ((1, 2), (0, 1))
+        C1 = contract(A, B, axes=ax).to_dense()
+        C2 = contract_dense(A, B, axes=ax).to_dense()
+        C3 = contract_block_csr(A, B, axes=ax, interpret=True).to_dense()
+        np.testing.assert_allclose(np.asarray(C1), np.asarray(C2), atol=1e-12)
+        np.testing.assert_allclose(np.asarray(C1), np.asarray(C3), atol=1e-10)
+
+
+class TestSVD:
+    def _theta(self, seed=3):
+        for s in range(seed, seed + 50):  # ensure a non-empty block structure
+            rng = np.random.default_rng(s)
+            ixs = [rand_index(rng, flow=f) for f in (IN, OUT, OUT, OUT)]
+            t = BlockSparseTensor.random(ixs, key=jax.random.PRNGKey(s))
+            if t.num_blocks > 1:
+                return t
+        raise RuntimeError("no non-trivial theta found")
+
+    def test_exact_roundtrip(self):
+        theta = self._theta()
+        U, V, _, err = svd_split(theta, 2, max_bond=10**6, cutoff=0.0)
+        U.check(), V.check()
+        rec = contract(U, V, axes=((2,), (0,)))
+        np.testing.assert_allclose(
+            np.asarray(rec.to_dense()), np.asarray(theta.to_dense()), atol=1e-12
+        )
+        assert err < 1e-24
+
+    def test_isometry(self):
+        """U must be left-orthogonal: U† U = I on the bond."""
+        theta = self._theta()
+        U, _, _, _ = svd_split(theta, 2, max_bond=10**6, cutoff=0.0, absorb="right")
+        gram = contract(U.conj(), U, axes=((0, 1), (0, 1))).to_dense()
+        np.testing.assert_allclose(
+            np.asarray(gram), np.eye(gram.shape[0]), atol=1e-12
+        )
+
+    @given(max_bond=st.integers(1, 12))
+    @settings(max_examples=8, deadline=None)
+    def test_truncation_error_equals_discarded_weight(self, max_bond):
+        theta = self._theta(11)
+        U, V, _, err = svd_split(theta, 2, max_bond=max_bond, cutoff=0.0)
+        rec = contract(U, V, axes=((2,), (0,)))
+        actual = float(np.sum(np.abs(np.asarray(rec.to_dense() - theta.to_dense())) ** 2))
+        np.testing.assert_allclose(actual, err, rtol=1e-8, atol=1e-12)
+
+
+class TestPytree:
+    def test_jit_through_blocksparse(self):
+        A, B = rand_pair(0)
+
+        @jax.jit
+        def f(a, b):
+            return contract(a, b, axes=((1,), (0,)))
+
+        C1 = f(A, B).to_dense()
+        C2 = contract(A, B, axes=((1,), (0,))).to_dense()
+        np.testing.assert_allclose(np.asarray(C1), np.asarray(C2), atol=1e-12)

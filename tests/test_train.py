@@ -1,0 +1,162 @@
+"""Training substrate: optimizer, data pipeline determinism, checkpointing
+(atomicity + elastic restore), gradient compression, straggler detection."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.train.checkpoint import CheckpointManager
+from repro.train.compress import compressed_grads, init_error_state
+from repro.train.data import SyntheticLM
+from repro.train.optim import OptConfig, adamw_update, init_opt_state, lr_at
+from repro.train.straggler import StepMonitor
+
+
+class TestOptimizer:
+    def test_adamw_reduces_quadratic(self):
+        oc = OptConfig(lr=0.1, warmup_steps=0, total_steps=100,
+                       weight_decay=0.0, grad_clip=1e9)
+        params = {"w": jnp.array([3.0, -2.0])}
+        state = init_opt_state(params)
+        for _ in range(200):
+            grads = {"w": 2 * params["w"]}
+            params, state, _ = adamw_update(oc, params, grads, state)
+        assert float(jnp.sum(jnp.abs(params["w"]))) < 1e-2
+
+    def test_grad_clip(self):
+        oc = OptConfig(lr=1.0, grad_clip=1.0, warmup_steps=0)
+        params = {"w": jnp.zeros(4)}
+        state = init_opt_state(params)
+        _, _, m = adamw_update(oc, params, {"w": jnp.full(4, 100.0)}, state)
+        assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+    def test_lr_schedule(self):
+        oc = OptConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+        assert float(lr_at(oc, jnp.int32(5))) == pytest.approx(5e-4)
+        assert float(lr_at(oc, jnp.int32(10))) == pytest.approx(1e-3)
+        assert float(lr_at(oc, jnp.int32(100))) == pytest.approx(1e-4, rel=0.01)
+
+
+class TestData:
+    def test_deterministic_and_restorable(self):
+        d1 = SyntheticLM(100, 32, 4, seed=7)
+        b1 = [next(d1) for _ in range(3)]
+        st_ = d1.state_dict()
+        b_next = next(d1)
+        d2 = SyntheticLM(100, 32, 4, seed=7)
+        d2.load_state_dict(st_)
+        b_resume = next(d2)
+        np.testing.assert_array_equal(np.asarray(b_next["tokens"]),
+                                      np.asarray(b_resume["tokens"]))
+        # and different steps differ
+        assert not np.array_equal(np.asarray(b1[0]["tokens"]),
+                                  np.asarray(b1[1]["tokens"]))
+
+    def test_labels_shifted(self):
+        d = SyntheticLM(50, 16, 2, seed=1)
+        b = next(d)
+        assert b["tokens"].shape == (2, 16) and b["labels"].shape == (2, 16)
+
+
+class TestCheckpoint:
+    def test_roundtrip_and_retention(self, tmp_path):
+        cm = CheckpointManager(tmp_path, keep=2)
+        for s in (1, 2, 3):
+            cm.save(s, {"a": jnp.arange(4) * s}, meta={"s": s})
+        assert cm.all_steps() == [2, 3]
+        step, arrs, meta = cm.restore()
+        assert step == 3 and meta["s"] == 3
+        np.testing.assert_array_equal(np.asarray(arrs["a"]), np.arange(4) * 3)
+
+    def test_async_save(self, tmp_path):
+        cm = CheckpointManager(tmp_path, keep=3)
+        cm.save_async(5, {"x": jnp.ones((8, 8))}, meta={})
+        cm.wait()
+        assert cm.latest_step() == 5
+
+    def test_partial_write_ignored(self, tmp_path):
+        cm = CheckpointManager(tmp_path, keep=3)
+        cm.save(1, {"x": jnp.ones(2)})
+        # simulate a crash mid-write: dir without manifest
+        os.makedirs(tmp_path / "step_0000000002")
+        (tmp_path / "step_0000000002" / "arrays.npz").write_bytes(b"junk")
+        assert cm.latest_step() == 1
+
+    def test_elastic_restore_resharding(self, tmp_path):
+        """Restore onto a different mesh (1 device here, but via explicit
+        sharding objects — the mesh-independence path)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        cm = CheckpointManager(tmp_path)
+        cm.save(1, {"w": jnp.arange(16.0).reshape(4, 4)})
+        mesh = jax.make_mesh((1,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        sh = NamedSharding(mesh, P("data", None))
+        _, arrs, _ = cm.restore(shardings={"w": sh})
+        assert arrs["w"].sharding == sh
+        np.testing.assert_array_equal(
+            np.asarray(arrs["w"]), np.arange(16.0).reshape(4, 4))
+
+
+class TestCompression:
+    @given(mode=st.sampled_from(["bf16", "int8"]), seed=st.integers(0, 50))
+    @settings(max_examples=10, deadline=None)
+    def test_error_feedback_bounds_error(self, mode, seed):
+        """With error feedback, the ACCUMULATED applied gradient tracks the
+        true accumulated gradient to quantization precision."""
+        key = jax.random.PRNGKey(seed)
+        params = {"w": jnp.zeros(64)}
+        err = init_error_state(params)
+        true_sum = jnp.zeros(64)
+        applied_sum = jnp.zeros(64)
+        for i in range(20):
+            key, k2 = jax.random.split(key)
+            g = {"w": jax.random.normal(k2, (64,))}
+            true_sum = true_sum + g["w"]
+            cg, err = compressed_grads(g, err, mode)
+            applied_sum = applied_sum + cg["w"]
+        # residual error is bounded by the final error-feedback state
+        np.testing.assert_allclose(
+            np.asarray(applied_sum + err["w"]), np.asarray(true_sum),
+            rtol=1e-5, atol=1e-4,
+        )
+
+    def test_int8_single_step_error(self):
+        g = {"w": jnp.linspace(-1, 1, 128)}
+        cg, err = compressed_grads(g, init_error_state(g), "int8")
+        assert float(jnp.max(jnp.abs(cg["w"] - g["w"]))) < 1.0 / 127 + 1e-6
+
+
+class TestStraggler:
+    def test_detects_spike(self):
+        mon = StepMonitor(warmup=3, sigma_mult=3.0, evict_after=2)
+        for i in range(10):
+            mon.stop(i, seconds=0.1)
+        r = mon.stop(10, seconds=1.0)
+        assert r is not None and not r.evict
+        r = mon.stop(11, seconds=1.0)
+        assert r is not None and r.evict
+
+    def test_tolerates_noise(self):
+        mon = StepMonitor(warmup=3)
+        rng = np.random.default_rng(0)
+        reports = [mon.stop(i, seconds=0.1 + 0.005 * rng.random())
+                   for i in range(50)]
+        assert all(r is None for r in reports)
+
+
+def test_train_loop_end_to_end(tmp_path):
+    """Tiny real training run: loss must drop; resume must continue."""
+    from repro.launch.train import main
+
+    common = ["--arch", "granite_3_2b", "--smoke",
+              "--global-batch", "2", "--seq-len", "32", "--log-every", "0",
+              "--checkpoint-every", "6", "--checkpoint-dir", str(tmp_path)]
+    losses = main(common + ["--steps", "12"])
+    assert losses[-1] < losses[0]
+    losses2 = main(common + ["--steps", "16", "--resume", "auto"])
+    assert len(losses2) == 4  # resumed at 12, ran to 16
