@@ -1,0 +1,143 @@
+"""Distributed contraction engine: plan-cache and mesh-sharding benchmarks.
+
+Weak-scaling style run on a 16-site m=32 Heisenberg chain comparing
+
+- seed per-call contraction (``list_unplanned``) vs the plan-cached engine
+  (``list``) vs the plan-cached + jitted planned matvec (``list`` + jit),
+- an 8-fake-device mesh-sharded sweep (energy must match single-device),
+
+and emits both CSV rows (via benchmarks/run.py) and a JSON record so future
+PRs have a perf trajectory.  Must run in its own process with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` set *before* jax
+imports; ``main()`` below re-execs itself accordingly and run.py invokes it
+as a subprocess.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+_XLA_FLAG = "--xla_force_host_platform_device_count=8"
+
+
+def _bench(n=16, m=32, sweeps=2):
+    import jax
+
+    from repro.core.models import heisenberg_j1j2_terms
+    from repro.core.mpo import build_mpo, compress_mpo
+    from repro.core.mps import neel_states, product_state_mps
+    from repro.core.siteops import spin_half_space
+    from repro.core.sweep import DMRGEngine
+    from repro.dist import BlockShardPolicy, make_block_mesh
+    from repro.dist.engine import ContractionEngine
+    from repro.dist.plan import PlanCache
+
+    sp = spin_half_space()
+    terms = heisenberg_j1j2_terms(n // 2, 2, 1.0, 0.5, cylinder=False)
+    mpo = compress_mpo(build_mpo(sp, terms, n), cutoff=1e-13)
+
+    def fresh_engine(**kw):
+        mps = product_state_mps(sp, neel_states(sp, n))
+        return DMRGEngine(mps, mpo, davidson_iters=2, **kw)
+
+    def timed_sweeps(eng):
+        eng.sweep(max_bond=m)  # grow bond + warm XLA/plan/jit caches
+        t0 = time.perf_counter()
+        for _ in range(sweeps):
+            s = eng.sweep(max_bond=m)
+        return (time.perf_counter() - t0) / sweeps, float(s.energy)
+
+    rec = {"n_sites": n, "max_bond": m, "devices": jax.device_count()}
+
+    t_seed, e_seed = timed_sweeps(fresh_engine(algo="list_unplanned"))
+    rec["seed_unplanned_sweep_s"] = t_seed
+
+    cache = PlanCache()
+    eng = fresh_engine(engine=ContractionEngine(backend="list", cache=cache))
+    t_plan, e_plan = timed_sweeps(eng)
+    rec["planned_sweep_s"] = t_plan
+    rec["plan_cache"] = cache.stats()
+    rec["plan_speedup"] = t_seed / max(t_plan, 1e-12)
+
+    t_jit, e_jit = timed_sweeps(fresh_engine(algo="list", jit_matvec=True))
+    rec["planned_jit_sweep_s"] = t_jit
+    rec["jit_speedup"] = t_seed / max(t_jit, 1e-12)
+
+    t_auto, e_auto = timed_sweeps(fresh_engine(algo="auto"))
+    rec["auto_sweep_s"] = t_auto
+
+    policy = BlockShardPolicy(make_block_mesh())
+    t_shard, e_shard = timed_sweeps(
+        fresh_engine(algo="list", shard_policy=policy)
+    )
+    rec["sharded_sweep_s"] = t_shard
+    rec["sharded_energy_diff"] = abs(e_shard - e_plan)
+    rec["energy"] = e_plan
+    assert abs(e_seed - e_plan) < 1e-10, (e_seed, e_plan)
+    assert abs(e_seed - e_jit) < 1e-10, (e_seed, e_jit)
+    assert abs(e_seed - e_auto) < 1e-8, (e_seed, e_auto)
+    assert abs(e_seed - e_shard) < 1e-10, (e_seed, e_shard)
+    return rec
+
+
+def _child_main():
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    rec = _bench()
+    print("BENCH_DIST_JSON " + json.dumps(rec))
+
+
+def run():
+    """run.py entry: execute in a subprocess (XLA flag must precede jax)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " " + _XLA_FLAG).strip()
+    env.setdefault("JAX_ENABLE_X64", "1")
+    proc = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--child"],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=3600,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(f"bench_dist child failed:\n{proc.stderr[-2000:]}")
+    rec = None
+    for line in proc.stdout.splitlines():
+        if line.startswith("BENCH_DIST_JSON "):
+            rec = json.loads(line[len("BENCH_DIST_JSON "):])
+    assert rec is not None, proc.stdout
+    out_path = os.path.join(os.path.dirname(__file__), "bench_dist.json")
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=2, sort_keys=True)
+    rows = [
+        ("dist_seed_unplanned_sweep", rec["seed_unplanned_sweep_s"] * 1e6, ""),
+        (
+            "dist_planned_sweep",
+            rec["planned_sweep_s"] * 1e6,
+            f"speedup={rec['plan_speedup']:.2f}x;"
+            f"cache_hits={rec['plan_cache']['hits']};"
+            f"cache_misses={rec['plan_cache']['misses']}",
+        ),
+        (
+            "dist_planned_jit_sweep",
+            rec["planned_jit_sweep_s"] * 1e6,
+            f"speedup={rec['jit_speedup']:.2f}x",
+        ),
+        ("dist_auto_sweep", rec["auto_sweep_s"] * 1e6, ""),
+        (
+            "dist_sharded_sweep",
+            rec["sharded_sweep_s"] * 1e6,
+            f"devices={rec['devices']};ediff={rec['sharded_energy_diff']:.1e}",
+        ),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    if "--child" in sys.argv:
+        _child_main()
+    else:
+        for name, us, derived in run():
+            print(f"{name},{us:.1f},{derived}")

@@ -1,4 +1,5 @@
-# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV and
+# (for the dist suite) writes benchmarks/bench_dist.json as a perf record.
 import os
 import sys
 
@@ -8,7 +9,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 def main() -> None:
     from benchmarks import (bench_blocks, bench_contraction, bench_davidson,
-                            bench_lm, bench_scaling, bench_sweep)
+                            bench_dist, bench_lm, bench_scaling, bench_sweep)
 
     suites = [
         ("Fig5/10/13: contraction algorithms", bench_contraction.run),
@@ -16,6 +17,8 @@ def main() -> None:
         ("TableII: cost model + weak scaling", bench_scaling.run),
         ("Alg1: Davidson", bench_davidson.run),
         ("Fig6: sweep uniformity", bench_sweep.run),
+        # subprocess: needs --xla_force_host_platform_device_count before jax
+        ("Dist: plan cache + mesh sharding", bench_dist.run),
         ("LM cells (beyond paper)", bench_lm.run),
     ]
     print("name,us_per_call,derived")

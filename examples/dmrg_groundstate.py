@@ -21,13 +21,24 @@ def main(argv=None):
     ap.add_argument("--ly", type=int, default=2)
     ap.add_argument("--max-bond", type=int, default=32)
     ap.add_argument("--sweeps-per-bond", type=int, default=2)
-    ap.add_argument("--algo", choices=["list", "dense", "csr", "csr_ref"],
+    ap.add_argument("--algo",
+                    choices=["list", "dense", "csr", "csr_ref", "auto",
+                             "list_unplanned"],
                     default="list")
+    ap.add_argument("--jit-matvec", action="store_true",
+                    help="jit the planned two-site matvec")
+    ap.add_argument("--shard", action="store_true",
+                    help="mesh-shard blocks over all visible devices "
+                         "(pair with XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=8 on CPU)")
     ap.add_argument("--j2", type=float, default=0.5)
     ap.add_argument("--u", type=float, default=8.5)
     ap.add_argument("--check-ed", action="store_true",
                     help="compare against exact diagonalization (small only)")
     args = ap.parse_args(argv)
+    if args.algo.endswith("_unplanned") and (args.shard or args.jit_matvec):
+        ap.error("--shard/--jit-matvec require an engine algo, "
+                 "not " + args.algo)
 
     from repro.core import run_dmrg
     from repro.core.models import electron_system, spin_system
@@ -38,12 +49,19 @@ def main(argv=None):
         space, terms = electron_system(args.lx, args.ly, u=args.u)
     n = args.lx * args.ly
 
+    shard_policy = None
+    if args.shard:
+        from repro.dist import BlockShardPolicy, make_block_mesh
+        shard_policy = BlockShardPolicy(make_block_mesh())
+
     schedule = [m for m in (8, 16, 32, 64, 128, 256) if m <= args.max_bond]
     print(f"{args.system}: {args.lx}x{args.ly} cylinder, {n} sites, "
-          f"algo={args.algo}, schedule={schedule}")
+          f"algo={args.algo}, schedule={schedule}"
+          + (f", mesh={dict(shard_policy.mesh.shape)}" if shard_policy else ""))
     res = run_dmrg(space, terms, n, bond_schedule=schedule,
                    sweeps_per_bond=args.sweeps_per_bond,
-                   davidson_iters=4, algo=args.algo, verbose=True)
+                   davidson_iters=4, algo=args.algo, verbose=True,
+                   jit_matvec=args.jit_matvec, shard_policy=shard_policy)
     print(f"\nground-state energy estimate: {res.energy:.10f}")
     print(f"energy per site:              {res.energy / n:.10f}")
 

@@ -10,6 +10,7 @@ from typing import List, Optional, Sequence
 
 import jax.numpy as jnp
 
+from ..dist.shard import BlockShardPolicy
 from .mpo import build_mpo, compress_mpo
 from .mps import MPS, neel_states, product_state_mps
 from .siteops import LocalSpace
@@ -40,13 +41,22 @@ def run_dmrg(
     initial_states: Optional[Sequence[int]] = None,
     dtype=jnp.float64,
     verbose: bool = False,
+    jit_matvec: bool = False,
+    shard_policy: Optional[BlockShardPolicy] = None,
 ) -> DMRGResult:
     mpo = build_mpo(space, terms, n_sites, dtype=dtype)
     if mpo_cutoff is not None:
         mpo = compress_mpo(mpo, cutoff=mpo_cutoff)
     states = list(initial_states) if initial_states is not None else neel_states(space, n_sites)
     mps = product_state_mps(space, states, dtype=dtype)
-    engine = DMRGEngine(mps, mpo, algo=algo, davidson_iters=davidson_iters)
+    engine = DMRGEngine(
+        mps,
+        mpo,
+        algo=algo,
+        davidson_iters=davidson_iters,
+        jit_matvec=jit_matvec,
+        shard_policy=shard_policy,
+    )
 
     stats: List[SweepStats] = []
     for m in bond_schedule:

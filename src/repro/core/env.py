@@ -6,7 +6,11 @@ Environment index convention (bra, mpo, ket):
 so that every contraction with site/MPO/bra tensors type-checks by flow.
 
 The contraction backend is pluggable: "list" (paper Alg. 2), "dense"
-(sparse-dense), or "csr" (sparse-sparse, TPU block-CSR adaptation).
+(sparse-dense), "csr" (sparse-sparse, TPU block-CSR adaptation), or "auto"
+(cost-model choice).  All of them now execute through the plan-cached
+``dist.ContractionEngine``; ``get_contractor`` is kept as a thin compat shim
+over it.  The ``*_unplanned`` names expose the seed per-call algorithms for
+A/B benchmarking.
 """
 from __future__ import annotations
 
@@ -14,19 +18,33 @@ from typing import Callable, List
 
 import jax.numpy as jnp
 
+from ..dist.engine import ContractionEngine
 from ..tensor.blocksparse import BlockSparseTensor, contract, contract_dense
 from ..tensor.block_csr import contract_block_csr
 from ..tensor.qn import IN, Index, OUT
 
 
 def get_contractor(algo: str) -> Callable:
-    if algo == "list":
-        return contract
-    if algo == "dense":
-        return contract_dense
+    """Compat shim: algorithm name -> plan-cached ContractionEngine.
+
+    The returned object is callable as ``fn(a, b, axes)`` exactly like the
+    bare contraction functions it replaces; sweep code that wants the engine
+    extras (jitted matvec, sharding policy, stats) can use them when present.
+    """
+    if algo in ("list", "dense"):
+        return ContractionEngine(backend=algo)
     if algo == "csr":
-        return lambda a, b, axes: contract_block_csr(a, b, axes, interpret=True)
+        return ContractionEngine(backend="csr", interpret=True, use_kernel=True)
     if algo == "csr_ref":
+        return ContractionEngine(backend="csr", use_kernel=False)
+    if algo in ("auto", "planned"):
+        return ContractionEngine(backend="auto")
+    # seed per-call algorithms, kept for A/B comparison in bench_dist
+    if algo == "list_unplanned":
+        return contract
+    if algo == "dense_unplanned":
+        return contract_dense
+    if algo == "csr_unplanned":
         return lambda a, b, axes: contract_block_csr(a, b, axes, use_kernel=False)
     raise ValueError(f"unknown contraction algorithm: {algo}")
 

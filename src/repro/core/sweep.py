@@ -2,8 +2,12 @@
 
 Maintains left/right environments incrementally, optimizes each neighboring
 pair with Davidson, splits with a blockwise truncated SVD absorbing the
-singular values along the sweep direction, and supports all three contraction
-backends ("list", "dense", "csr").
+singular values along the sweep direction, and supports all contraction
+backends ("list", "dense", "csr", "auto") through the plan-cached
+``dist.ContractionEngine``.  Optional extras when the backend is an engine
+(the default): a jitted planned matvec (``jit_matvec=True``) and a
+``BlockShardPolicy`` that keeps MPS/MPO/environment blocks mesh-sharded,
+mirroring the paper's distribute-every-block-over-all-processors layout.
 """
 from __future__ import annotations
 
@@ -11,6 +15,8 @@ import dataclasses
 import time
 from typing import Callable, List, Optional
 
+from ..dist.engine import ContractionEngine
+from ..dist.shard import BlockShardPolicy
 from ..tensor.blocksparse import BlockSparseTensor, contract, flip_flow, svd_split
 from .davidson import davidson
 from .env import (
@@ -44,12 +50,44 @@ class DMRGEngine:
         algo: str = "list",
         davidson_iters: int = 2,
         seed: int = 0,
+        jit_matvec: bool = False,
+        shard_policy: Optional[BlockShardPolicy] = None,
+        engine: Optional[Callable] = None,
     ):
         assert mps.n_sites == len(mpo)
         self.mps = mps
         self.mpo = mpo
         self.algo = algo
-        self.contract_fn = get_contractor(algo)
+        self.contract_fn = engine if engine is not None else get_contractor(algo)
+        self.jit_matvec = jit_matvec
+        if not isinstance(self.contract_fn, ContractionEngine):
+            # bare contractors (the *_unplanned algos, or a plain callable
+            # passed via engine=) have no gather step (sharded blocks would
+            # deadlock eager CPU collectives) and no jit pipeline; fail
+            # loudly instead of hanging / silently ignoring the flag
+            backend = (
+                f"algo={algo!r}" if engine is None
+                else f"engine={type(engine).__name__}"
+            )
+            if shard_policy is not None:
+                raise ValueError(
+                    f"shard_policy requires a ContractionEngine backend, "
+                    f"not {backend}"
+                )
+            if jit_matvec:
+                raise ValueError(
+                    f"jit_matvec requires a ContractionEngine backend, "
+                    f"not {backend}"
+                )
+        if isinstance(self.contract_fn, ContractionEngine):
+            # the shard_policy parameter is the single source of truth: set it
+            # on the engine, or clear a policy left over from a previous
+            # DMRGEngine that reused the same ContractionEngine instance
+            self.contract_fn.policy = shard_policy
+        if shard_policy is not None:
+            self.mps.tensors = shard_policy.place_mps(self.mps.tensors)
+            self.mpo = shard_policy.place_mps(self.mpo)
+        self.shard_policy = shard_policy
         self.davidson_iters = davidson_iters
         self.seed = seed
         self.n = mps.n_sites
@@ -64,17 +102,26 @@ class DMRGEngine:
         self.right_envs[n - 1] = right_edge(T[n - 1], W[n - 1])
         # build right envs down to site 1 (first pair needs right_envs[1])
         for j in range(n - 2, 0, -1):
-            self.right_envs[j] = extend_right(
+            self.right_envs[j] = self._place(extend_right(
                 self.right_envs[j + 1], T[j + 1], W[j + 1], self.contract_fn
-            )
+            ))
+
+    def _place(self, t: BlockSparseTensor) -> BlockSparseTensor:
+        """Mesh-shard a stored tensor (env / site) when a policy is attached."""
+        return t if self.shard_policy is None else self.shard_policy.place(t)
 
     def _optimize_pair(self, j: int, max_bond: int, cutoff: float, absorb: str):
         T, W = self.mps.tensors, self.mpo
         A, B = self.left_envs[j], self.right_envs[j + 1]
-        theta = contract(T[j], T[j + 1], axes=((2,), (0,)))
+        theta = self.contract_fn(T[j], T[j + 1], ((2,), (0,)))
 
-        def mv(x):
-            return matvec_two_site(A, W[j], W[j + 1], B, x, self.contract_fn)
+        if isinstance(self.contract_fn, ContractionEngine):
+            mv = self.contract_fn.matvec_fn(
+                A, W[j], W[j + 1], B, jit=self.jit_matvec
+            )
+        else:
+            def mv(x):
+                return matvec_two_site(A, W[j], W[j + 1], B, x, self.contract_fn)
 
         lam, theta = davidson(
             mv, theta, n_iter=self.davidson_iters, seed=self.seed + j
@@ -82,8 +129,8 @@ class DMRGEngine:
         U, V, _, err = svd_split(
             theta, 2, max_bond=max_bond, cutoff=cutoff, absorb=absorb
         )
-        T[j] = flip_flow(U, 2)
-        T[j + 1] = flip_flow(V, 0)
+        T[j] = self._place(flip_flow(U, 2))
+        T[j + 1] = self._place(flip_flow(V, 0))
         return lam, err
 
     def sweep(self, max_bond: int, cutoff: float = 1e-12) -> SweepStats:
@@ -97,9 +144,9 @@ class DMRGEngine:
         for j in range(n - 1):  # left -> right
             ts = time.perf_counter()
             lam, err = self._optimize_pair(j, max_bond, cutoff, absorb="right")
-            self.left_envs[j + 1] = extend_left(
+            self.left_envs[j + 1] = self._place(extend_left(
                 self.left_envs[j], T[j], W[j], self.contract_fn
-            )
+            ))
             energies.append(lam)
             site_secs.append(time.perf_counter() - ts)
             max_err = max(max_err, err)
@@ -107,9 +154,9 @@ class DMRGEngine:
         for j in range(n - 2, -1, -1):  # right -> left
             ts = time.perf_counter()
             lam, err = self._optimize_pair(j, max_bond, cutoff, absorb="left")
-            self.right_envs[j] = extend_right(
+            self.right_envs[j] = self._place(extend_right(
                 self.right_envs[j + 1], T[j + 1], W[j + 1], self.contract_fn
-            )
+            ))
             energies.append(lam)
             site_secs.append(time.perf_counter() - ts)
             max_err = max(max_err, err)

@@ -1,0 +1,28 @@
+"""Distributed contraction engine (DESIGN.md Sec. 3).
+
+Three layers, mirroring the paper's separation of symbolic planning from
+numeric execution:
+
+- ``plan``:   ``ContractionPlan`` — the static (lhs, rhs) -> out block-pair
+              table, output indices/charges and matricized shapes, derived
+              once per block structure and cached by structural signature.
+- ``shard``:  ``BlockShardPolicy`` — places each block's row/column modes on
+              mesh axes (the paper's "every block over all processors"
+              layout), with divisibility-aware fallback to replication.
+- ``engine``: ``ContractionEngine`` — executes plans through a pluggable
+              list / dense / csr backend chosen by a flop-and-padding cost
+              model, and jits the planned two-site matvec.
+"""
+from .engine import ContractionEngine
+from .plan import ContractionPlan, PlanCache, get_plan, global_plan_cache
+from .shard import BlockShardPolicy, make_block_mesh
+
+__all__ = [
+    "ContractionEngine",
+    "ContractionPlan",
+    "PlanCache",
+    "get_plan",
+    "global_plan_cache",
+    "BlockShardPolicy",
+    "make_block_mesh",
+]

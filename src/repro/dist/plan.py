@@ -1,0 +1,330 @@
+"""Contraction plans: the static, cacheable half of a block-sparse contraction.
+
+Everything the list / dense / csr algorithms derive from quantum numbers —
+the (lhs, rhs) -> out block-pair table, output indices and charge, output
+block shapes, matricized (row, col) dims and padded batch shapes — is a pure
+function of ``(a.indices, a.charge, a block keys, b.indices, b.charge,
+b block keys, axes)``.  The seed code re-derived all of it in Python on every
+``contract()`` call, i.e. 4 contractions x davidson_iters x 2N sites per
+sweep.  A ``ContractionPlan`` computes it once and a ``PlanCache`` keyed by
+that structural signature reuses it for the whole sweep (the analogue of
+CTF's one-time output-sparsity precomputation, paper Sec. IV-B).
+
+Plans hold only Python/numpy metadata — no jax arrays — so building them
+never touches a device and they are safe to share across jit traces (block
+keys and Index metadata are concrete even under tracing).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..tensor.blocksparse import BlockKey, BlockSparseTensor
+from ..tensor.qn import Charge, Index, qadd
+
+PlanSignature = Tuple
+
+Axes = Tuple[Tuple[int, ...], Tuple[int, ...]]
+
+
+def plan_signature(
+    a: BlockSparseTensor, b: BlockSparseTensor, axes: Axes
+) -> PlanSignature:
+    """Structural signature of a contraction: indices, charges, keys, axes.
+
+    Two contractions with equal signatures have identical symbolic structure
+    (same pair table, same output blocks), whatever their numeric contents.
+    Index is a frozen dataclass (name excluded from equality) and charges /
+    keys are int tuples, so the signature is hashable.
+    """
+    ax_a, ax_b = tuple(axes[0]), tuple(axes[1])
+    return (
+        a.indices,
+        a.charge,
+        tuple(sorted(a.blocks)),
+        b.indices,
+        b.charge,
+        tuple(sorted(b.blocks)),
+        ax_a,
+        ax_b,
+    )
+
+
+def _prod(xs) -> int:
+    out = 1
+    for x in xs:
+        out *= int(x)
+    return out
+
+
+@dataclasses.dataclass
+class CsrLayout:
+    """Packed-batch layout for the block-CSR backend (see block_csr.py)."""
+
+    a_keys: Tuple[BlockKey, ...]          # participating lhs keys, pack order
+    b_keys: Tuple[BlockKey, ...]          # participating rhs keys, pack order
+    bm: int                               # padded matricized row dim
+    bk: int                               # padded contracted dim
+    bn: int                               # padded matricized col dim
+    li: np.ndarray                        # [P] lhs pack slot per pair
+    ri: np.ndarray                        # [P] rhs pack slot per pair
+    oi: np.ndarray                        # [P] output slot per pair (sorted)
+    out_keys: Tuple[BlockKey, ...]        # output key per output slot
+    out_rc: Tuple[Tuple[int, int], ...]   # unpadded (rows, cols) per out slot
+    dev_idx: Optional[Tuple] = None       # memoized (li, ri, oi) device arrays
+
+
+@dataclasses.dataclass
+class ContractionPlan:
+    """Precomputed symbolic structure of one block-sparse contraction."""
+
+    signature: PlanSignature
+    ax_a: Tuple[int, ...]
+    ax_b: Tuple[int, ...]
+    keep_a: Tuple[int, ...]
+    keep_b: Tuple[int, ...]
+    out_indices: Tuple[Index, ...]
+    out_charge: Charge
+    # (ka, kb, kc) per multiplied block pair, recorded in the block-dict
+    # insertion order of the tensors the plan was built from — the same order
+    # seed `contract` iterates.  On a cache hit from a structurally-equal
+    # tensor with a *different* insertion order, the multiset of pairs is
+    # identical but the accumulation order is the plan builder's, so results
+    # may differ from seed in the last ulp (well inside the 1e-10 contract).
+    pairs: Tuple[Tuple[BlockKey, BlockKey, BlockKey], ...]
+    out_keys: Tuple[BlockKey, ...]        # unique output keys, first-seen order
+    # cost model inputs
+    flops_list: float                     # sum over pairs of 2*M*K*N
+    flops_dense: float                    # one dense tensordot over full dims
+    num_in_blocks: int = 0                # len(a.blocks) + len(b.blocks)
+    _csr: Optional[CsrLayout] = None
+    _dense_out_slices: Optional[Tuple[Tuple[BlockKey, Tuple[slice, ...]], ...]] = None
+
+    # ------------------------------------------------------------------ build
+    @staticmethod
+    def build(
+        a: BlockSparseTensor, b: BlockSparseTensor, axes: Axes
+    ) -> "ContractionPlan":
+        ax_a, ax_b = tuple(axes[0]), tuple(axes[1])
+        assert len(ax_a) == len(ax_b)
+        for ia, ib in zip(ax_a, ax_b):
+            assert a.indices[ia].can_contract(b.indices[ib]), (
+                f"mode {ia} of A cannot contract mode {ib} of B: "
+                f"{a.indices[ia]} vs {b.indices[ib]}"
+            )
+        keep_a = tuple(i for i in range(a.ndim) if i not in ax_a)
+        keep_b = tuple(i for i in range(b.ndim) if i not in ax_b)
+        out_indices = tuple(a.indices[i] for i in keep_a) + tuple(
+            b.indices[i] for i in keep_b
+        )
+        out_charge = qadd(a.charge, b.charge)
+
+        b_by_sig: Dict[Tuple[int, ...], List[BlockKey]] = {}
+        for kb in b.blocks:
+            b_by_sig.setdefault(tuple(kb[i] for i in ax_b), []).append(kb)
+
+        pairs: List[Tuple[BlockKey, BlockKey, BlockKey]] = []
+        out_keys: List[BlockKey] = []
+        seen: Dict[BlockKey, int] = {}
+        flops_list = 0.0
+        for ka in a.blocks:
+            sig = tuple(ka[i] for i in ax_a)
+            for kb in b_by_sig.get(sig, ()):
+                kc = tuple(ka[i] for i in keep_a) + tuple(kb[i] for i in keep_b)
+                if kc not in seen:
+                    seen[kc] = len(out_keys)
+                    out_keys.append(kc)
+                pairs.append((ka, kb, kc))
+                m = _prod(a.indices[i].sector_dim(ka[i]) for i in keep_a)
+                k = _prod(a.indices[i].sector_dim(ka[i]) for i in ax_a)
+                n = _prod(b.indices[i].sector_dim(kb[i]) for i in keep_b)
+                flops_list += 2.0 * m * k * n
+
+        dense_m = _prod(a.indices[i].dim for i in keep_a)
+        dense_k = _prod(a.indices[i].dim for i in ax_a)
+        dense_n = _prod(b.indices[i].dim for i in keep_b)
+        flops_dense = 2.0 * dense_m * dense_k * dense_n
+
+        plan = ContractionPlan(
+            signature=plan_signature(a, b, axes),
+            ax_a=ax_a,
+            ax_b=ax_b,
+            keep_a=keep_a,
+            keep_b=keep_b,
+            out_indices=out_indices,
+            out_charge=out_charge,
+            pairs=tuple(pairs),
+            out_keys=tuple(out_keys),
+            flops_list=flops_list,
+            flops_dense=flops_dense,
+            num_in_blocks=len(a.blocks) + len(b.blocks),
+        )
+        return plan
+
+    @staticmethod
+    def _mshape(
+        indices: Tuple[Index, ...], key: BlockKey, keep, ax
+    ) -> Tuple[int, int]:
+        rows = _prod([indices[i].sector_dim(key[i]) for i in keep] or [1])
+        cols = _prod([indices[i].sector_dim(key[i]) for i in ax] or [1])
+        return rows, cols
+
+    def _build_csr(self) -> CsrLayout:
+        """Padded-batch layout: the csr half of block_csr.py, symbolically.
+
+        Built lazily on first ``csr``/``flops_csr`` access so list/dense runs
+        never pay for it; every input comes from the structural signature,
+        not live tensors.
+        """
+        a_indices, _, a_keys_sorted, b_indices, _, b_keys_sorted = self.signature[:6]
+        a_pos = {k: i for i, k in enumerate(a_keys_sorted)}
+        b_pos = {k: i for i, k in enumerate(b_keys_sorted)}
+        out_pos = {k: i for i, k in enumerate(self.out_keys)}
+        trip = sorted(
+            ((a_pos[ka], b_pos[kb], out_pos[kc]) for ka, kb, kc in self.pairs),
+            key=lambda t: t[2],
+        )
+        part_a = sorted({t[0] for t in trip})
+        part_b = sorted({t[1] for t in trip})
+        bm = max(
+            self._mshape(a_indices, a_keys_sorted[i], self.keep_a, self.ax_a)[0]
+            for i in part_a
+        )
+        bk = max(
+            max(
+                self._mshape(a_indices, a_keys_sorted[i], self.keep_a, self.ax_a)[1]
+                for i in part_a
+            ),
+            max(
+                self._mshape(b_indices, b_keys_sorted[i], self.keep_b, self.ax_b)[1]
+                for i in part_b
+            ),
+        )
+        bn = max(
+            self._mshape(b_indices, b_keys_sorted[i], self.keep_b, self.ax_b)[0]
+            for i in part_b
+        )
+        a_remap = {i: n for n, i in enumerate(part_a)}
+        b_remap = {i: n for n, i in enumerate(part_b)}
+        nk = len(self.keep_a)
+        out_rc = tuple(
+            (
+                _prod([self.out_indices[i].sector_dim(kc[i]) for i in range(nk)] or [1]),
+                _prod(
+                    [
+                        self.out_indices[i].sector_dim(kc[i])
+                        for i in range(nk, len(self.out_indices))
+                    ]
+                    or [1]
+                ),
+            )
+            for kc in self.out_keys
+        )
+        return CsrLayout(
+            a_keys=tuple(a_keys_sorted[i] for i in part_a),
+            b_keys=tuple(b_keys_sorted[i] for i in part_b),
+            bm=bm,
+            bk=bk,
+            bn=bn,
+            li=np.array([a_remap[t[0]] for t in trip], np.int32),
+            ri=np.array([b_remap[t[1]] for t in trip], np.int32),
+            oi=np.array([t[2] for t in trip], np.int32),
+            out_keys=self.out_keys,
+            out_rc=out_rc,
+        )
+
+    # ------------------------------------------------------- lazy dense layout
+    def dense_out_slices(self) -> Tuple[Tuple[BlockKey, Tuple[slice, ...]], ...]:
+        """All charge-legal output blocks and their dense-embedding slices.
+
+        Matches seed ``BlockSparseTensor.from_dense`` (which extracts every
+        valid key, including blocks that happen to be zero).  The valid-key
+        enumeration is the expensive recursive part, so it is computed lazily
+        on first dense execution and memoized on the plan.
+        """
+        if self._dense_out_slices is None:
+            probe = BlockSparseTensor(self.out_indices, {}, self.out_charge)
+            offs = [ix.offsets() for ix in self.out_indices]
+            rows = []
+            for k in probe.valid_keys():
+                sl = tuple(
+                    slice(offs[i][s], offs[i][s] + self.out_indices[i].sector_dim(s))
+                    for i, s in enumerate(k)
+                )
+                rows.append((k, sl))
+            self._dense_out_slices = tuple(rows)
+        return self._dense_out_slices
+
+    @property
+    def csr(self) -> CsrLayout:
+        assert self.pairs, "csr layout undefined for empty pair table"
+        if self._csr is None:
+            self._csr = self._build_csr()
+        return self._csr
+
+    @property
+    def flops_csr(self) -> float:
+        """Padded-batch csr flops: pairs * 2*BM*BK*BN (triggers lazy layout)."""
+        if not self.pairs:
+            return 0.0
+        L = self.csr
+        return 2.0 * len(self.pairs) * L.bm * L.bk * L.bn
+
+    @property
+    def num_pairs(self) -> int:
+        return len(self.pairs)
+
+    def out_block_shape(self, kc: BlockKey) -> Tuple[int, ...]:
+        return tuple(ix.sector_dim(s) for ix, s in zip(self.out_indices, kc))
+
+
+class PlanCache:
+    """LRU cache of ContractionPlans keyed by structural signature."""
+
+    def __init__(self, maxsize: int = 4096):
+        self.maxsize = maxsize
+        self._plans: "OrderedDict[PlanSignature, ContractionPlan]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(
+        self, a: BlockSparseTensor, b: BlockSparseTensor, axes: Axes
+    ) -> ContractionPlan:
+        sig = plan_signature(a, b, axes)
+        plan = self._plans.get(sig)
+        if plan is not None:
+            self.hits += 1
+            self._plans.move_to_end(sig)
+            return plan
+        self.misses += 1
+        plan = ContractionPlan.build(a, b, axes)
+        self._plans[sig] = plan
+        while len(self._plans) > self.maxsize:
+            self._plans.popitem(last=False)
+        return plan
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def clear(self):
+        self._plans.clear()
+        self.hits = 0
+        self.misses = 0
+
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses, "size": len(self._plans)}
+
+
+global_plan_cache = PlanCache()
+
+
+def get_plan(
+    a: BlockSparseTensor,
+    b: BlockSparseTensor,
+    axes: Axes,
+    cache: Optional[PlanCache] = None,
+) -> ContractionPlan:
+    return (cache or global_plan_cache).get(a, b, axes)

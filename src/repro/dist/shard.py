@@ -1,0 +1,135 @@
+"""Block sharding: every block over all processors (paper Fig. 2a).
+
+The paper's key layout decision is to distribute *each* quantum-number block
+over the whole processor grid instead of assigning whole blocks to nodes —
+block sizes are wildly non-uniform (the largest scales ~ m), so
+blocks-to-nodes load-imbalances.  Here each block is a ``jax.Array`` placed
+with a ``NamedSharding`` over a 2-D ("row", "col") device mesh built by
+``launch/mesh.make_mesh``: the block's largest mode divisible by the "row"
+axis size is row-sharded, the largest remaining mode divisible by the "col"
+axis size is col-sharded, and everything else — including whole blocks whose
+modes are all indivisible, common for the tiny edge sectors — falls back to
+replication.  Replication is always correct (jax inserts resharding
+collectives as needed), so the policy is purely a performance hint and the
+sharded sweep is numerically identical to the single-device sweep.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..launch.mesh import make_mesh
+from ..tensor.blocksparse import BlockSparseTensor
+
+
+def _near_square_factors(n: int) -> Tuple[int, int]:
+    r = 1
+    for d in range(1, int(n**0.5) + 1):
+        if n % d == 0:
+            r = d
+    return r, n // r
+
+
+def make_block_mesh(
+    devices: Optional[Sequence] = None, shape: Optional[Tuple[int, int]] = None
+) -> Mesh:
+    """2-D ("row", "col") mesh over all (or the given) devices."""
+    n = len(devices) if devices is not None else jax.device_count()
+    if shape is None:
+        shape = _near_square_factors(n)
+    assert shape[0] * shape[1] == n, f"mesh shape {shape} != {n} devices"
+    return make_mesh(shape, ("row", "col"), devices=devices)
+
+
+@dataclasses.dataclass
+class BlockShardPolicy:
+    """Places each block's modes on mesh axes, replicating when indivisible.
+
+    ``mode`` selects how sharded blocks are *computed* on:
+
+    - "spmd": operands stay sharded through eager ops; XLA partitions each
+      GEMM and inserts collectives (the intended layout on TPU/GPU, where the
+      runtime orders collectives per device).
+    - "storage": blocks are stored sharded on the mesh, but the engine
+      gathers operands to replicated form (a device_put reshard — runtime
+      copies, no XLA collectives) before computing.  Required on the CPU
+      host-device backend: eager ops each compile their own collectives, the
+      CPU runtime dispatches computations asynchronously, and collectives
+      from different computations (over different device subsets) interleave
+      across device threads and deadlock their rendezvous.
+    - "auto" (default): "storage" on an all-CPU mesh, "spmd" otherwise.
+    """
+
+    mesh: Mesh
+    row_axis: str = "row"
+    col_axis: str = "col"
+    mode: str = "auto"
+
+    def __post_init__(self):
+        assert self.mode in ("auto", "spmd", "storage")
+        if self.mode == "auto":
+            all_cpu = all(d.platform == "cpu" for d in self.mesh.devices.flat)
+            self.mode = "storage" if all_cpu else "spmd"
+
+    @property
+    def storage_only(self) -> bool:
+        return self.mode == "storage"
+
+    def spec_for(self, shape: Tuple[int, ...]) -> P:
+        row_n = int(self.mesh.shape[self.row_axis])
+        col_n = int(self.mesh.shape[self.col_axis])
+        assign = [None] * len(shape)
+        # largest mode divisible by the row-axis size gets the row axis
+        order = sorted(range(len(shape)), key=lambda i: -shape[i])
+        row_at = next((i for i in order if shape[i] % row_n == 0 and row_n > 1), None)
+        if row_at is not None:
+            assign[row_at] = self.row_axis
+        col_at = next(
+            (
+                i
+                for i in order
+                if i != row_at and shape[i] % col_n == 0 and col_n > 1
+            ),
+            None,
+        )
+        if col_at is not None:
+            assign[col_at] = self.col_axis
+        return P(*assign)
+
+    def sharding_for(self, shape: Tuple[int, ...]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(tuple(shape)))
+
+    def place_block(self, block: jax.Array) -> jax.Array:
+        if isinstance(block, jax.core.Tracer):  # inside jit: layout is XLA's
+            return block
+        return jax.device_put(block, self.sharding_for(block.shape))
+
+    def place(self, t: BlockSparseTensor) -> BlockSparseTensor:
+        """Re-place every block of a tensor per the policy (no-op on values)."""
+        return BlockSparseTensor(
+            t.indices, {k: self.place_block(b) for k, b in t.blocks.items()}, t.charge
+        )
+
+    def place_mps(self, tensors):
+        return [self.place(t) for t in tensors]
+
+    # --------------------------------------------------------------- gather
+    def _replicated_block(self, block: jax.Array) -> jax.Array:
+        if isinstance(block, jax.core.Tracer):
+            return block
+        sh = getattr(block, "sharding", None)
+        if sh is not None and sh.is_fully_replicated:
+            return block
+        return jax.device_put(block, NamedSharding(self.mesh, P()))
+
+    def replicated(self, t: BlockSparseTensor) -> BlockSparseTensor:
+        """Gather every block to full replication (runtime copy, no XLA
+        collectives) so downstream eager math is collective-free."""
+        return BlockSparseTensor(
+            t.indices,
+            {k: self._replicated_block(b) for k, b in t.blocks.items()},
+            t.charge,
+        )

@@ -127,7 +127,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
 
     import jax
     from repro.configs import get_config
-    from repro.launch.mesh import HW, make_production_mesh
+    from repro.launch.mesh import HW, make_production_mesh, mesh_context
     from repro.launch import specs
 
     t0 = time.time()
@@ -148,7 +148,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
             return rec
         fn, args, in_sh, out_sh, donate = specs.lm_cell(arch, shape_name, mesh)
 
-    with jax.sharding.set_mesh(mesh):
+    with mesh_context(mesh):
         jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                       donate_argnums=donate)
         lowered = jfn.lower(*args)

@@ -9,20 +9,33 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes, devices=None):
+    # axis_types landed after jax 0.4.x; Auto is the default there anyway
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, devices=devices,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+        )
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
-def make_mesh(shape, axes):
+def make_mesh(shape, axes, devices=None):
     """Arbitrary (elastic) mesh with the same axis-type convention."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return _make_mesh(tuple(shape), tuple(axes), devices=devices)
+
+
+def mesh_context(mesh):
+    """Enter a mesh: jax.sharding.set_mesh where available (jax >= 0.5.x),
+    else the legacy global-mesh context manager (``with mesh:``)."""
+    if hasattr(jax.sharding, "set_mesh"):
+        return jax.sharding.set_mesh(mesh)
+    return mesh
 
 
 # TPU v5e, per chip (roofline constants from the assignment)

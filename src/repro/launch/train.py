@@ -40,7 +40,7 @@ def main(argv=None):
 
     from repro import models
     from repro.configs import get_config
-    from repro.launch.mesh import make_mesh
+    from repro.launch.mesh import make_mesh, mesh_context
     from repro.launch.sharding import batch_axes_for, tree_shardings
     from repro.launch import specs
     from repro.train.checkpoint import CheckpointManager
@@ -84,7 +84,7 @@ def main(argv=None):
         opt.update({f"err/{k}": v for k, v in init_error_state(params).items()})
         oshard = dict(oshard, **{f"err/{k}": pshard[k] for k in params})
 
-    with jax.sharding.set_mesh(mesh):
+    with mesh_context(mesh):
         jfn = jax.jit(step_fn, donate_argnums=(0, 1))
         mon = StepMonitor()
         extras = {}

@@ -21,6 +21,36 @@ from .blocksparse import BlockKey, BlockSparseTensor
 from .qn import qadd
 
 
+def pack_blocks(
+    t: BlockSparseTensor,
+    keys: Sequence[BlockKey],
+    keep: Sequence[int],
+    ax: Sequence[int],
+    rdim: int,
+    cdim: int,
+    keep_first: bool,
+) -> jnp.ndarray:
+    """Matricize + zero-pad blocks into one [len(keys), rdim, cdim] batch.
+
+    ``keep_first`` puts the kept modes on rows (lhs layout) vs the contracted
+    modes on rows (rhs layout).  Shared by the seed csr contraction below and
+    the plan-executed csr backend in dist/engine.py so the padding/transpose
+    conventions cannot diverge.
+    """
+    keep, ax = list(keep), list(ax)
+    out = []
+    for k in keys:
+        blk = t.blocks[k]
+        perm = keep + ax if keep_first else ax + keep
+        blk = jnp.transpose(blk, perm)
+        r = int(np.prod([t.indices[i].sector_dim(k[i]) for i in (keep if keep_first else ax)] or [1]))
+        c = int(np.prod([t.indices[i].sector_dim(k[i]) for i in (ax if keep_first else keep)] or [1]))
+        blk = blk.reshape(r, c)
+        blk = jnp.pad(blk, ((0, (rdim - r)), (0, (cdim - c))))
+        out.append(blk)
+    return jnp.stack(out)
+
+
 def contract_block_csr(
     a: BlockSparseTensor,
     b: BlockSparseTensor,
@@ -81,23 +111,10 @@ def contract_block_csr(
     )
     BN = max(mshape(b, b_keys[i], keep_b, ax_b)[0] for i in part_b)
 
-    def pack(t, keys, keep, ax, rdim, cdim, transpose_to_keep_first):
-        out = []
-        for k in keys:
-            blk = t.blocks[k]
-            perm = keep + list(ax) if transpose_to_keep_first else list(ax) + keep
-            blk = jnp.transpose(blk, perm)
-            r = int(np.prod([t.indices[i].sector_dim(k[i]) for i in (keep if transpose_to_keep_first else ax)] or [1]))
-            c = int(np.prod([t.indices[i].sector_dim(k[i]) for i in (ax if transpose_to_keep_first else keep)] or [1]))
-            blk = blk.reshape(r, c)
-            blk = jnp.pad(blk, ((0, (rdim - r)), (0, (cdim - c))))
-            out.append(blk)
-        return jnp.stack(out)
-
     a_remap = {i: n for n, i in enumerate(part_a)}
     b_remap = {i: n for n, i in enumerate(part_b)}
-    lhs_all = pack(a, [a_keys[i] for i in part_a], keep_a, ax_a, BM, BK, True)   # [Na', BM, BK]
-    rhs_all = pack(b, [b_keys[i] for i in part_b], keep_b, ax_b, BK, BN, False)  # [Nb', BK, BN]
+    lhs_all = pack_blocks(a, [a_keys[i] for i in part_a], keep_a, ax_a, BM, BK, True)   # [Na', BM, BK]
+    rhs_all = pack_blocks(b, [b_keys[i] for i in part_b], keep_b, ax_b, BK, BN, False)  # [Nb', BK, BN]
 
     li = jnp.array([a_remap[p[0]] for p in pairs], jnp.int32)
     ri = jnp.array([b_remap[p[1]] for p in pairs], jnp.int32)

@@ -9,3 +9,14 @@ os.environ.setdefault("JAX_ENABLE_X64", "1")
 # launch/dryrun.py (run as its own process) requests 512 placeholder devices.
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Property tests import hypothesis; the container may not ship it.  Fall back
+# to the deterministic stub in _hypothesis_stub.py so collection never dies
+# (real hypothesis, when installed via requirements-dev.txt, always wins).
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    from _hypothesis_stub import install as _install_hypothesis_stub
+
+    _install_hypothesis_stub()

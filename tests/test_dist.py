@@ -1,0 +1,264 @@
+"""Distributed contraction engine: plan-cache semantics, plan-executed
+backends vs the seed per-call algorithms (block-for-block), engine-driven
+DMRG vs the seed sweep, and an 8-fake-device mesh-sharded sweep."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import run_dmrg
+from repro.core.models import heisenberg_j1j2_terms
+from repro.core.siteops import spin_half_space
+from repro.dist import ContractionEngine, PlanCache, get_plan
+from repro.dist.plan import ContractionPlan, plan_signature
+from repro.tensor import (
+    BlockSparseTensor,
+    Index,
+    OUT,
+    contract,
+    contract_block_csr,
+    contract_dense,
+)
+
+
+def rand_index(rng, nq=1, max_sectors=3, max_dim=4, flow=OUT):
+    ns = rng.integers(1, max_sectors + 1)
+    charges = rng.choice(np.arange(-2, 3), size=(8, nq), replace=True)
+    charges = [tuple(int(c) for c in q) for q in charges]
+    uniq = []
+    for q in charges:
+        if q not in uniq:
+            uniq.append(q)
+    uniq = uniq[:ns]
+    return Index(tuple((q, int(rng.integers(1, max_dim + 1))) for q in uniq), flow)
+
+
+def rand_pair(seed, nq=1):
+    rng = np.random.default_rng(seed)
+    shared = rand_index(rng, nq=nq)
+    ia = rand_index(rng, nq=nq)
+    ib = rand_index(rng, nq=nq)
+    A = BlockSparseTensor.random([ia, shared], key=jax.random.PRNGKey(seed))
+    B = BlockSparseTensor.random([shared.dual(), ib], key=jax.random.PRNGKey(seed + 1))
+    return A, B
+
+
+AX = ((1,), (0,))
+
+
+class TestPlanCache:
+    def test_hit_miss_semantics(self):
+        A, B = rand_pair(0)
+        cache = PlanCache()
+        p1 = cache.get(A, B, AX)
+        assert cache.stats() == {"hits": 0, "misses": 1, "size": 1}
+        p2 = cache.get(A, B, AX)
+        assert p2 is p1
+        assert cache.stats() == {"hits": 1, "misses": 1, "size": 1}
+        # same structure, different numbers -> hit (signature is structural)
+        A2 = BlockSparseTensor(
+            A.indices, {k: 2.0 * b for k, b in A.blocks.items()}, A.charge
+        )
+        assert cache.get(A2, B, AX) is p1
+        # different structure -> miss
+        C, D = rand_pair(5)
+        if plan_signature(C, D, AX) != plan_signature(A, B, AX):
+            cache.get(C, D, AX)
+            assert cache.misses == 2
+
+    def test_lru_eviction(self):
+        cache = PlanCache(maxsize=2)
+        pairs = [rand_pair(s) for s in (0, 5, 9)]
+        sigs = {plan_signature(a, b, AX) for a, b in pairs}
+        if len(sigs) < 3:
+            pytest.skip("random structures collided")
+        for a, b in pairs:
+            cache.get(a, b, AX)
+        assert len(cache) == 2
+        # first pair was evicted -> rebuilt on next get
+        cache.get(*pairs[0], AX)
+        assert cache.misses == 4
+
+    def test_signature_ignores_index_names(self):
+        A, B = rand_pair(3)
+        renamed = BlockSparseTensor(
+            tuple(Index(ix.sectors, ix.flow, "other") for ix in A.indices),
+            A.blocks,
+            A.charge,
+        )
+        assert plan_signature(A, B, AX) == plan_signature(renamed, B, AX)
+
+    def test_plan_pair_table_matches_list_algorithm(self):
+        A, B = rand_pair(1)
+        plan = ContractionPlan.build(A, B, AX)
+        ref = contract(A, B, AX)
+        assert set(k for _, _, k in plan.pairs) == set(ref.blocks.keys())
+        assert plan.out_indices == ref.indices
+        assert plan.out_charge == ref.charge
+
+
+class TestPlanExecutionEquivalence:
+    """Plan-executed backends match the seed per-call algorithms
+    block-for-block on random charged tensors."""
+
+    @pytest.mark.parametrize("seed", range(8))
+    def test_list_block_for_block(self, seed):
+        A, B = rand_pair(seed, nq=1 + seed % 2)
+        eng = ContractionEngine(backend="list", cache=PlanCache())
+        got, ref = eng(A, B, AX), contract(A, B, AX)
+        assert set(got.blocks) == set(ref.blocks)
+        for k in ref.blocks:
+            np.testing.assert_allclose(
+                np.asarray(got.blocks[k]), np.asarray(ref.blocks[k]), atol=1e-13
+            )
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_dense_block_for_block(self, seed):
+        A, B = rand_pair(seed)
+        eng = ContractionEngine(backend="dense", cache=PlanCache())
+        got, ref = eng(A, B, AX), contract_dense(A, B, AX)
+        assert set(got.blocks) == set(ref.blocks)
+        for k in ref.blocks:
+            np.testing.assert_allclose(
+                np.asarray(got.blocks[k]), np.asarray(ref.blocks[k]), atol=1e-13
+            )
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_csr_block_for_block(self, seed):
+        A, B = rand_pair(seed)
+        eng = ContractionEngine(backend="csr", cache=PlanCache(), use_kernel=False)
+        got = eng(A, B, AX)
+        ref = contract_block_csr(A, B, AX, use_kernel=False)
+        assert set(got.blocks) == set(ref.blocks)
+        for k in ref.blocks:
+            np.testing.assert_allclose(
+                np.asarray(got.blocks[k]), np.asarray(ref.blocks[k]), atol=1e-12
+            )
+
+    def test_higher_order_all_backends(self):
+        rng = np.random.default_rng(7)
+        i1, i2, i3 = (rand_index(rng) for _ in range(3))
+        A = BlockSparseTensor.random([i1, i2, i3], key=jax.random.PRNGKey(0))
+        B = BlockSparseTensor.random(
+            [i2.dual(), i3.dual(), i1], key=jax.random.PRNGKey(1)
+        )
+        ax = ((1, 2), (0, 1))
+        ref = contract(A, B, axes=ax).to_dense()
+        for backend in ("list", "dense", "csr", "auto"):
+            eng = ContractionEngine(
+                backend=backend, cache=PlanCache(), use_kernel=False
+            )
+            np.testing.assert_allclose(
+                np.asarray(eng(A, B, ax).to_dense()), np.asarray(ref), atol=1e-12
+            )
+
+    def test_auto_choice_and_counts(self):
+        A, B = rand_pair(2)
+        eng = ContractionEngine(backend="auto", cache=PlanCache())
+        plan = get_plan(A, B, AX, cache=eng.cache)
+        assert eng.choose_backend(plan) in ("list", "dense")
+        eng(A, B, AX)
+        assert sum(eng.backend_counts.values()) == 1
+
+    def test_jit_matvec_reuses_plans(self):
+        A, B = rand_pair(4)
+        cache = PlanCache()
+        eng = ContractionEngine(backend="list", cache=cache)
+        jf = jax.jit(lambda a, b: eng(a, b, AX))
+        C1 = jf(A, B).to_dense()
+        C2 = jf(A, B).to_dense()  # second call: trace cache, no new plans
+        np.testing.assert_allclose(np.asarray(C1), np.asarray(C2), atol=0)
+        np.testing.assert_allclose(
+            np.asarray(C1), np.asarray(contract(A, B, AX).to_dense()), atol=1e-12
+        )
+        assert cache.misses == 1
+
+
+class TestEngineDMRG:
+    def _system(self):
+        sp = spin_half_space()
+        terms = heisenberg_j1j2_terms(3, 2, 1.0, 0.5, cylinder=False)
+        return sp, terms
+
+    def test_planned_energy_equals_seed_list(self):
+        sp, terms = self._system()
+        kw = dict(bond_schedule=(8, 16), sweeps_per_bond=2, davidson_iters=6)
+        seed = run_dmrg(sp, terms, 6, algo="list_unplanned", **kw)
+        planned = run_dmrg(sp, terms, 6, algo="list", **kw)
+        assert abs(seed.energy - planned.energy) < 1e-10
+        for s_seed, s_plan in zip(seed.sweep_stats, planned.sweep_stats):
+            assert abs(s_seed.energy - s_plan.energy) < 1e-10
+
+    def test_jit_matvec_energy_equals_seed(self):
+        sp, terms = self._system()
+        kw = dict(bond_schedule=(8,), sweeps_per_bond=2, davidson_iters=4)
+        seed = run_dmrg(sp, terms, 6, algo="list_unplanned", **kw)
+        jit = run_dmrg(sp, terms, 6, algo="list", jit_matvec=True, **kw)
+        assert abs(seed.energy - jit.energy) < 1e-10
+
+    def test_auto_backend_energy_equals_seed(self):
+        sp, terms = self._system()
+        kw = dict(bond_schedule=(8,), sweeps_per_bond=2, davidson_iters=4)
+        seed = run_dmrg(sp, terms, 6, algo="list_unplanned", **kw)
+        auto = run_dmrg(sp, terms, 6, algo="auto", **kw)
+        assert abs(seed.energy - auto.energy) < 1e-10
+
+    def test_engine_features_rejected_for_bare_contractors(self):
+        """Bare seed contractors can't gather sharded blocks (deadlock) or
+        jit the planned matvec — must fail loudly, not hang / ignore."""
+        from repro.dist import BlockShardPolicy, make_block_mesh
+
+        sp, terms = self._system()
+        kw = dict(bond_schedule=(8,), sweeps_per_bond=1, davidson_iters=2)
+        with pytest.raises(ValueError, match="shard_policy"):
+            run_dmrg(sp, terms, 6, algo="list_unplanned",
+                     shard_policy=BlockShardPolicy(make_block_mesh()), **kw)
+        with pytest.raises(ValueError, match="jit_matvec"):
+            run_dmrg(sp, terms, 6, algo="list_unplanned", jit_matvec=True, **kw)
+
+
+@pytest.mark.slow
+class TestShardedSweep:
+    """8-fake-device mesh-sharded sweep == single-device sweep (subprocess:
+    the XLA device-count flag must be set before jax initializes)."""
+
+    def test_sharded_energy_matches_single_device(self, tmp_path):
+        src = os.path.join(os.path.dirname(__file__), "..", "src")
+        code = textwrap.dedent(f"""\
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        os.environ["JAX_ENABLE_X64"] = "1"
+        import sys
+        sys.path.insert(0, r"{os.path.abspath(src)}")
+        import jax
+        assert jax.device_count() == 8, jax.device_count()
+        from repro.core import run_dmrg
+        from repro.core.models import heisenberg_j1j2_terms
+        from repro.core.siteops import spin_half_space
+        from repro.dist import BlockShardPolicy, make_block_mesh
+
+        sp = spin_half_space()
+        terms = heisenberg_j1j2_terms(3, 2, 1.0, 0.5, cylinder=False)
+        kw = dict(bond_schedule=(8, 16), sweeps_per_bond=1, davidson_iters=4)
+        single = run_dmrg(sp, terms, 6, algo="list", **kw)
+        policy = BlockShardPolicy(make_block_mesh())
+        assert policy.mesh.shape["row"] * policy.mesh.shape["col"] == 8
+        sharded = run_dmrg(sp, terms, 6, algo="list", shard_policy=policy, **kw)
+        diff = abs(single.energy - sharded.energy)
+        assert diff < 1e-10, (single.energy, sharded.energy)
+        print(f"SHARDED_OK diff={{diff:.2e}}")
+        """)
+        script = tmp_path / "sharded_sweep.py"
+        script.write_text(code)
+        proc = subprocess.run(
+            [sys.executable, str(script)],
+            capture_output=True,
+            text=True,
+            timeout=900,
+        )
+        assert proc.returncode == 0, proc.stderr[-2000:]
+        assert "SHARDED_OK" in proc.stdout

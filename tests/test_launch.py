@@ -16,9 +16,8 @@ REPO = Path(__file__).resolve().parents[1]
 
 class TestShardingRules:
     def _mesh(self):
-        import jax
-        return jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh
+        return make_mesh((1, 1), ("data", "model"))
 
     def test_divisibility_fallback(self):
         from jax.sharding import PartitionSpec as P

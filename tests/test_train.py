@@ -93,8 +93,8 @@ class TestCheckpoint:
 
         cm = CheckpointManager(tmp_path)
         cm.save(1, {"w": jnp.arange(16.0).reshape(4, 4)})
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((1,), ("data",))
         sh = NamedSharding(mesh, P("data", None))
         _, arrs, _ = cm.restore(shardings={"w": sh})
         assert arrs["w"].sharding == sh
