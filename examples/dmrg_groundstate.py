@@ -22,8 +22,8 @@ def main(argv=None):
     ap.add_argument("--max-bond", type=int, default=32)
     ap.add_argument("--sweeps-per-bond", type=int, default=2)
     ap.add_argument("--algo",
-                    choices=["list", "dense", "csr", "csr_ref", "auto",
-                             "list_unplanned"],
+                    choices=["list", "dense", "csr", "csr_ref", "batched",
+                             "auto", "list_unplanned"],
                     default="list")
     ap.add_argument("--jit-matvec", action="store_true",
                     help="jit the planned two-site matvec")

@@ -42,6 +42,7 @@ def run_dmrg(
     dtype=jnp.float64,
     verbose: bool = False,
     jit_matvec: bool = False,
+    pad_matvec: Optional[bool] = None,
     shard_policy: Optional[BlockShardPolicy] = None,
 ) -> DMRGResult:
     mpo = build_mpo(space, terms, n_sites, dtype=dtype)
@@ -55,6 +56,7 @@ def run_dmrg(
         algo=algo,
         davidson_iters=davidson_iters,
         jit_matvec=jit_matvec,
+        pad_matvec=pad_matvec,
         shard_policy=shard_policy,
     )
 

@@ -6,8 +6,9 @@ Environment index convention (bra, mpo, ket):
 so that every contraction with site/MPO/bra tensors type-checks by flow.
 
 The contraction backend is pluggable: "list" (paper Alg. 2), "dense"
-(sparse-dense), "csr" (sparse-sparse, TPU block-CSR adaptation), or "auto"
-(cost-model choice).  All of them now execute through the plan-cached
+(sparse-dense), "csr" (sparse-sparse, TPU block-CSR adaptation), "batched"
+(shape-bucketed stacked GEMMs, dist/batch.py), or "auto" (cost-model
+choice).  All of them now execute through the plan-cached
 ``dist.ContractionEngine``; ``get_contractor`` is kept as a thin compat shim
 over it.  The ``*_unplanned`` names expose the seed per-call algorithms for
 A/B benchmarking.
@@ -31,7 +32,7 @@ def get_contractor(algo: str) -> Callable:
     bare contraction functions it replaces; sweep code that wants the engine
     extras (jitted matvec, sharding policy, stats) can use them when present.
     """
-    if algo in ("list", "dense"):
+    if algo in ("list", "dense", "batched"):
         return ContractionEngine(backend=algo)
     if algo == "csr":
         return ContractionEngine(backend="csr", interpret=True, use_kernel=True)

@@ -3,11 +3,13 @@
 Maintains left/right environments incrementally, optimizes each neighboring
 pair with Davidson, splits with a blockwise truncated SVD absorbing the
 singular values along the sweep direction, and supports all contraction
-backends ("list", "dense", "csr", "auto") through the plan-cached
-``dist.ContractionEngine``.  Optional extras when the backend is an engine
-(the default): a jitted planned matvec (``jit_matvec=True``) and a
-``BlockShardPolicy`` that keeps MPS/MPO/environment blocks mesh-sharded,
-mirroring the paper's distribute-every-block-over-all-processors layout.
+backends ("list", "dense", "csr", "batched", "auto") through the
+plan-cached ``dist.ContractionEngine``.  Optional extras when the backend
+is an engine (the default): a jitted planned matvec (``jit_matvec=True``)
+with bucket-padded operands so it compiles once per quantized structure
+(``pad_matvec``, defaulting to the jit flag), and a ``BlockShardPolicy``
+that keeps MPS/MPO/environment blocks mesh-sharded, mirroring the paper's
+distribute-every-block-over-all-processors layout.
 """
 from __future__ import annotations
 
@@ -15,6 +17,7 @@ import dataclasses
 import time
 from typing import Callable, List, Optional
 
+from ..dist.batch import pad_block_sparse, unpad_block_sparse
 from ..dist.engine import ContractionEngine
 from ..dist.shard import BlockShardPolicy
 from ..tensor.blocksparse import BlockSparseTensor, contract, flip_flow, svd_split
@@ -51,6 +54,7 @@ class DMRGEngine:
         davidson_iters: int = 2,
         seed: int = 0,
         jit_matvec: bool = False,
+        pad_matvec: Optional[bool] = None,
         shard_policy: Optional[BlockShardPolicy] = None,
         engine: Optional[Callable] = None,
     ):
@@ -60,6 +64,12 @@ class DMRGEngine:
         self.algo = algo
         self.contract_fn = engine if engine is not None else get_contractor(algo)
         self.jit_matvec = jit_matvec
+        # bucket-pad the Davidson operands so the jitted matvec sees a small
+        # set of block structures (compile-once); defaults to on iff jitting
+        self.pad_matvec = jit_matvec if pad_matvec is None else pad_matvec
+        # the MPO is immutable for the run — pad each site tensor once,
+        # not on every pair optimization
+        self._mpo_padded: List[Optional[BlockSparseTensor]] = [None] * len(mpo)
         if not isinstance(self.contract_fn, ContractionEngine):
             # bare contractors (the *_unplanned algos, or a plain callable
             # passed via engine=) have no gather step (sharded blocks would
@@ -106,6 +116,11 @@ class DMRGEngine:
                 self.right_envs[j + 1], T[j + 1], W[j + 1], self.contract_fn
             ))
 
+    def _padded_mpo(self, j: int) -> BlockSparseTensor:
+        if self._mpo_padded[j] is None:
+            self._mpo_padded[j] = pad_block_sparse(self.mpo[j])
+        return self._mpo_padded[j]
+
     def _place(self, t: BlockSparseTensor) -> BlockSparseTensor:
         """Mesh-shard a stored tensor (env / site) when a policy is attached."""
         return t if self.shard_policy is None else self.shard_policy.place(t)
@@ -115,17 +130,34 @@ class DMRGEngine:
         A, B = self.left_envs[j], self.right_envs[j + 1]
         theta = self.contract_fn(T[j], T[j + 1], ((2,), (0,)))
 
+        pad = (
+            self.pad_matvec and isinstance(self.contract_fn, ContractionEngine)
+        )
+        if pad:
+            # round every sector dim up to a power of two: zero-padding is
+            # exact (padded operator entries are zero) and quantizes the
+            # traced structure, so the jitted matvec compiles once per
+            # bucketed structure instead of once per site per sweep
+            orig_indices = theta.indices
+            A, B = pad_block_sparse(A), pad_block_sparse(B)
+            Wjp, Wj1p = self._padded_mpo(j), self._padded_mpo(j + 1)
+            theta = pad_block_sparse(theta)
+        else:
+            Wjp, Wj1p = W[j], W[j + 1]
+
         if isinstance(self.contract_fn, ContractionEngine):
             mv = self.contract_fn.matvec_fn(
-                A, W[j], W[j + 1], B, jit=self.jit_matvec
+                A, Wjp, Wj1p, B, jit=self.jit_matvec
             )
         else:
             def mv(x):
-                return matvec_two_site(A, W[j], W[j + 1], B, x, self.contract_fn)
+                return matvec_two_site(A, Wjp, Wj1p, B, x, self.contract_fn)
 
         lam, theta = davidson(
             mv, theta, n_iter=self.davidson_iters, seed=self.seed + j
         )
+        if pad:
+            theta = unpad_block_sparse(theta, orig_indices)
         U, V, _, err = svd_split(
             theta, 2, max_bond=max_bond, cutoff=cutoff, absorb=absorb
         )

@@ -9,10 +9,15 @@ numeric execution:
 - ``shard``:  ``BlockShardPolicy`` — places each block's row/column modes on
               mesh axes (the paper's "every block over all processors"
               layout), with divisibility-aware fallback to replication.
+- ``batch``:  shape-bucketed batched execution (stacked same-shape GEMMs +
+              segment-sum scatter) and the power-of-two sector padding that
+              makes the jitted matvec compile once instead of per site.
 - ``engine``: ``ContractionEngine`` — executes plans through a pluggable
-              list / dense / csr backend chosen by a flop-and-padding cost
-              model, and jits the planned two-site matvec.
+              list / dense / csr / batched backend chosen by a
+              flop-and-dispatch cost model, and jits the planned two-site
+              matvec.
 """
+from .batch import pad_block_sparse, unpad_block_sparse
 from .engine import ContractionEngine
 from .plan import ContractionPlan, PlanCache, get_plan, global_plan_cache
 from .shard import BlockShardPolicy, make_block_mesh
@@ -25,4 +30,6 @@ __all__ = [
     "global_plan_cache",
     "BlockShardPolicy",
     "make_block_mesh",
+    "pad_block_sparse",
+    "unpad_block_sparse",
 ]

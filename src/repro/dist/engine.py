@@ -8,11 +8,13 @@ through ``core/env.py`` / ``core/sweep.py``: it is callable as
    structural signature from a ``PlanCache``, skipping the per-call hash
    join / charge bookkeeping the seed algorithms re-derive every time;
 2. picks a backend — "list" (one tensordot per block pair), "dense" (embed +
-   one GEMM), or "csr" (padded batched block GEMM) — either fixed or by a
-   flop-and-padding cost model ("auto").  "auto" chooses between list and
-   dense; csr joins the auto candidate set only with ``allow_csr=True``,
-   since without a real Pallas target (TPU) the csr execution path is not
-   wall-time competitive however favorable its padded-flop count looks;
+   one GEMM), "batched" (shape-bucketed stacked GEMMs + segment-sum, see
+   dist/batch.py), or "csr" (padded batched block GEMM) — either fixed or by
+   a flop-and-dispatch cost model ("auto").  "auto" chooses between list,
+   dense and batched; csr joins the auto candidate set only with
+   ``allow_csr=True``, since without a real Pallas target (TPU) the csr
+   execution path is not wall-time competitive however favorable its
+   padded-flop count looks;
 3. executes the plan and, when a ``BlockShardPolicy`` is attached, places the
    output blocks on the device mesh (outside jit; under tracing XLA owns
    layout).
@@ -25,6 +27,7 @@ bond dimensions reuse both the plans and the compiled matvec.
 """
 from __future__ import annotations
 
+import time
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
@@ -33,6 +36,7 @@ import jax.numpy as jnp
 from ..kernels.block_gemm.ops import block_sparse_matmul
 from ..tensor.block_csr import pack_blocks
 from ..tensor.blocksparse import BlockKey, BlockSparseTensor
+from .batch import execute_batched, matricize_lhs, matricize_rhs, memo_dev_idx
 from .plan import Axes, ContractionPlan, PlanCache, global_plan_cache
 from .shard import BlockShardPolicy
 
@@ -60,7 +64,7 @@ class ContractionEngine:
         allow_csr: bool = False,
         pair_overhead: float = PAIR_OVERHEAD_FLOPS,
     ):
-        assert backend in ("auto", "list", "dense", "csr")
+        assert backend in ("auto", "list", "dense", "csr", "batched")
         self.backend = backend
         self.cache = cache if cache is not None else global_plan_cache
         self.policy = policy
@@ -68,23 +72,39 @@ class ContractionEngine:
         self.interpret = interpret
         self.allow_csr = allow_csr
         self.pair_overhead = pair_overhead
-        self.backend_counts: Dict[str, int] = {"list": 0, "dense": 0, "csr": 0}
+        zero = {"list": 0, "dense": 0, "csr": 0, "batched": 0}
+        self.backend_counts: Dict[str, int] = dict(zero)
+        self.backend_flops: Dict[str, float] = {k: 0.0 for k in zero}
+        self.backend_seconds: Dict[str, float] = {k: 0.0 for k in zero}
+        self.jit_retraces = 0
         self._jit_mv = None
 
     # ----------------------------------------------------------------- entry
     def __call__(
-        self, a: BlockSparseTensor, b: BlockSparseTensor, axes: Axes
+        self,
+        a: BlockSparseTensor,
+        b: BlockSparseTensor,
+        axes: Axes,
+        *,
+        a_mats=None,
+        b_mats=None,
     ) -> BlockSparseTensor:
         plan = self.cache.get(a, b, axes)
         backend = self.backend if self.backend != "auto" else self.choose_backend(plan)
         self.backend_counts[backend] += 1
+        self.backend_flops[backend] += self._plan_flops(plan, backend)
         if (
             self.policy is not None
             and self.policy.storage_only
             and not (_is_tracing(a) or _is_tracing(b))
         ):
             a, b = self.policy.replicated(a), self.policy.replicated(b)
-        out = getattr(self, f"_execute_{backend}")(plan, a, b)
+        t0 = time.perf_counter()
+        if backend == "batched":
+            out = self._execute_batched(plan, a, b, a_mats=a_mats, b_mats=b_mats)
+        else:
+            out = getattr(self, f"_execute_{backend}")(plan, a, b)
+        self.backend_seconds[backend] += time.perf_counter() - t0
         # spmd mode constrains output layout; storage mode leaves compute
         # results replicated — the sweep re-places what it actually stores
         if (
@@ -99,16 +119,31 @@ class ContractionEngine:
     def choose_backend(self, plan: ContractionPlan) -> str:
         # dense pays one GEMM over the padded full dims plus a per-block
         # dispatch for embedding/extraction (to_dense is .at[].set per block);
-        # list pays per-pair GEMM dispatch; csr pays padding flops but a
-        # single batched kernel.  All in equivalent flops.
+        # list pays per-pair GEMM dispatch; batched pays the exact list flops
+        # but dispatches per unique operand block (matricize), per bucket
+        # (stack + batched GEMM + segment-sum) and per output slot, all
+        # cheaper than a GEMM dispatch; csr pays padding flops but a single
+        # batched kernel.  All in equivalent flops.
         n_embed = plan.num_in_blocks + len(plan.out_keys)
         cost = {
             "list": plan.flops_list + self.pair_overhead * plan.num_pairs,
             "dense": plan.flops_dense + self.pair_overhead * n_embed,
         }
+        if plan.num_pairs:
+            L = plan.batched
+            n_disp = 0.5 * L.num_unique + 2.0 * L.num_buckets + 0.25 * L.num_out_slots
+            cost["batched"] = plan.flops_list + self.pair_overhead * n_disp
         if self.allow_csr and plan.num_pairs:
             cost["csr"] = plan.flops_csr + self.pair_overhead * plan.num_pairs * 0.25
         return min(cost, key=cost.get)
+
+    @staticmethod
+    def _plan_flops(plan: ContractionPlan, backend: str) -> float:
+        if backend == "dense":
+            return plan.flops_dense
+        if backend == "csr":
+            return plan.flops_csr if plan.num_pairs else 0.0
+        return plan.flops_list  # list and batched execute the exact pair flops
 
     # -------------------------------------------------------------- backends
     def _execute_list(
@@ -131,6 +166,29 @@ class ContractionEngine:
         blocks = {k: dense[sl] for k, sl in plan.dense_out_slices()}
         return BlockSparseTensor(plan.out_indices, blocks, plan.out_charge)
 
+    def _execute_batched(
+        self,
+        plan: ContractionPlan,
+        a: BlockSparseTensor,
+        b: BlockSparseTensor,
+        *,
+        a_mats=None,
+        b_mats=None,
+    ) -> BlockSparseTensor:
+        return execute_batched(
+            plan,
+            a,
+            b,
+            a_mats=a_mats,
+            b_mats=b_mats,
+            use_kernel=self.use_kernel,
+            interpret=self.interpret,
+            mesh=self._mesh_key(),
+        )
+
+    def _mesh_key(self):
+        return None if self.policy is None else self.policy.mesh
+
     def _execute_csr(
         self, plan: ContractionPlan, a: BlockSparseTensor, b: BlockSparseTensor
     ) -> BlockSparseTensor:
@@ -139,9 +197,12 @@ class ContractionEngine:
         L = plan.csr
         lhs_all = pack_blocks(a, L.a_keys, plan.keep_a, plan.ax_a, L.bm, L.bk, True)
         rhs_all = pack_blocks(b, L.b_keys, plan.keep_b, plan.ax_b, L.bk, L.bn, False)
-        if L.dev_idx is None:  # transfer the static index tables once per plan
-            L.dev_idx = (jnp.asarray(L.li), jnp.asarray(L.ri), jnp.asarray(L.oi))
-        li, ri, oi = L.dev_idx
+        li, ri, oi = memo_dev_idx(
+            L,
+            self._mesh_key(),
+            _is_tracing(a) or _is_tracing(b),
+            (L.li, L.ri, L.oi),
+        )
         lhs = lhs_all[li]
         rhs = rhs_all[ri]
         out_padded = block_sparse_matmul(
@@ -165,13 +226,35 @@ class ContractionEngine:
         Wj1: BlockSparseTensor,
         B: BlockSparseTensor,
         x: BlockSparseTensor,
+        mats=None,
     ) -> BlockSparseTensor:
-        """y = K x with K = A . W_j . W_{j+1} . B (paper Fig. 1d)."""
-        t = self(A, x, ((2,), (0,)))
-        t = self(t, Wj, ((1, 2), (0, 2)))
-        t = self(t, Wj1, ((4, 1), (0, 2)))
-        t = self(t, B, ((4, 1), (1, 2)))
+        """y = K x with K = A . W_j . W_{j+1} . B (paper Fig. 1d).
+
+        ``mats`` optionally carries the pre-matricized fixed operands
+        (A as lhs of step 1; W_j, W_{j+1}, B as rhs of steps 2-4), computed
+        once per Davidson solve by ``matvec_fn`` instead of inside every
+        call; only the batched backend consumes them.
+        """
+        mA, mWj, mWj1, mB = mats if mats is not None else (None,) * 4
+        t = self(A, x, ((2,), (0,)), a_mats=mA)
+        t = self(t, Wj, ((1, 2), (0, 2)), b_mats=mWj)
+        t = self(t, Wj1, ((4, 1), (0, 2)), b_mats=mWj1)
+        t = self(t, B, ((4, 1), (1, 2)), b_mats=mB)
         return t
+
+    def _fixed_operand_mats(self, A, Wj, Wj1, B):
+        """Matricized fixed Davidson operands for the batched backend.
+
+        The matricization axes are static per matvec step (A contracts its
+        mode 2 in step 1; W_j / W_{j+1} contract modes (0, 2); B contracts
+        modes (1, 2)), so these 2-D forms never depend on x's structure.
+        """
+        return (
+            matricize_lhs(A, (0, 1), (2,)),
+            matricize_rhs(Wj, (1, 3), (0, 2)),
+            matricize_rhs(Wj1, (1, 3), (0, 2)),
+            matricize_rhs(B, (0,), (1, 2)),
+        )
 
     def matvec_fn(
         self,
@@ -189,23 +272,41 @@ class ContractionEngine:
             Wj = self.policy.replicated(Wj)
             Wj1 = self.policy.replicated(Wj1)
             B = self.policy.replicated(B)
+        # "auto" may route any matvec step to the batched backend, so it
+        # precomputes the fixed-operand mats too (unused steps ignore them)
+        mats = (
+            self._fixed_operand_mats(A, Wj, Wj1, B)
+            if self.backend in ("batched", "auto")
+            else None
+        )
         if not jit:
-            return lambda x: self.two_site_matvec(A, Wj, Wj1, B, x)
+            return lambda x: self.two_site_matvec(A, Wj, Wj1, B, x, mats=mats)
         if self._jit_mv is None:
-            self._jit_mv = jax.jit(
-                lambda A_, Wj_, Wj1_, B_, x_: self.two_site_matvec(
-                    A_, Wj_, Wj1_, B_, x_
-                )
-            )
-        return lambda x: self._jit_mv(A, Wj, Wj1, B, x)
+
+            def _traced(A_, Wj_, Wj1_, B_, mats_, x_):
+                self.jit_retraces += 1  # body runs only when jax (re)traces
+                return self.two_site_matvec(A_, Wj_, Wj1_, B_, x_, mats=mats_)
+
+            self._jit_mv = jax.jit(_traced)
+        return lambda x: self._jit_mv(A, Wj, Wj1, B, mats, x)
 
     # ------------------------------------------------------------- reporting
     def stats(self) -> Dict:
-        """Plan-cache and backend-dispatch counters.
+        """Plan-cache, backend-dispatch, flop, wall-time and retrace counters.
 
-        Counters increment when ``__call__`` runs, i.e. at trace time under
-        a jitted matvec — compiled replays bypass Python, so with
-        ``jit_matvec=True`` the counts reflect unique traced structures, not
-        total executed contractions.
+        ``backend_counts`` / ``backend_flops`` increment when ``__call__``
+        runs, i.e. at trace time under a jitted matvec — compiled replays
+        bypass Python, so with ``jit_matvec=True`` they reflect unique traced
+        structures, not total executed contractions.  ``backend_seconds`` is
+        host-side dispatch time (jax is async; it excludes device queue
+        drain, and under tracing it measures trace time).  ``jit_retraces``
+        counts how many times the jitted matvec was (re)traced — the
+        compile-time side of the ledger, vs steady-state replays.
         """
-        return {"plan_cache": self.cache.stats(), "backend_counts": dict(self.backend_counts)}
+        return {
+            "plan_cache": self.cache.stats(),
+            "backend_counts": dict(self.backend_counts),
+            "backend_flops": dict(self.backend_flops),
+            "backend_seconds": dict(self.backend_seconds),
+            "jit_retraces": self.jit_retraces,
+        }

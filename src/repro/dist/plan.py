@@ -74,7 +74,47 @@ class CsrLayout:
     oi: np.ndarray                        # [P] output slot per pair (sorted)
     out_keys: Tuple[BlockKey, ...]        # output key per output slot
     out_rc: Tuple[Tuple[int, int], ...]   # unpadded (rows, cols) per out slot
-    dev_idx: Optional[Tuple] = None       # memoized (li, ri, oi) device arrays
+    # (li, ri, oi) device arrays memoized PER MESH: plans live in the global
+    # cache and outlive any one shard policy, so arrays committed under one
+    # mesh must not be replayed under another (keyed None = no policy)
+    dev_idx: Dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class ShapeBucket:
+    """All block pairs of a contraction sharing one matricized (M, K, N).
+
+    Every lhs block in the bucket matricizes to exactly (m, k) and every rhs
+    block to (k, n) — no padding — so the bucket executes as ONE stacked
+    batched GEMM with a segment-sum scatter over its output slots (the
+    fused same-shape batches of Menczer et al., arXiv:2407.07411).
+    """
+
+    m: int
+    k: int
+    n: int
+    a_keys: Tuple[BlockKey, ...]          # unique participating lhs keys
+    b_keys: Tuple[BlockKey, ...]          # unique participating rhs keys
+    li: np.ndarray                        # [P] lhs slot per pair
+    ri: np.ndarray                        # [P] rhs slot per pair
+    oi: np.ndarray                        # [P] output slot per pair, ascending
+    out_keys: Tuple[BlockKey, ...]        # bucket-local output key per slot
+    li_identity: bool = False             # li == arange(P): gather is a no-op
+    ri_identity: bool = False
+
+
+@dataclasses.dataclass
+class BatchedLayout:
+    """Shape-group table: the pair list bucketed by matricized (M, K, N)."""
+
+    buckets: Tuple[ShapeBucket, ...]
+    num_unique: int                       # sum over buckets of |a_keys|+|b_keys|
+    num_out_slots: int                    # sum over buckets of |out_keys|
+    dev_idx: Dict = dataclasses.field(default_factory=dict)  # per-mesh, as CsrLayout
+
+    @property
+    def num_buckets(self) -> int:
+        return len(self.buckets)
 
 
 @dataclasses.dataclass
@@ -101,6 +141,7 @@ class ContractionPlan:
     flops_dense: float                    # one dense tensordot over full dims
     num_in_blocks: int = 0                # len(a.blocks) + len(b.blocks)
     _csr: Optional[CsrLayout] = None
+    _batched: Optional[BatchedLayout] = None
     _dense_out_slices: Optional[Tuple[Tuple[BlockKey, Tuple[slice, ...]], ...]] = None
 
     # ------------------------------------------------------------------ build
@@ -235,6 +276,80 @@ class ContractionPlan:
             out_keys=self.out_keys,
             out_rc=out_rc,
         )
+
+    def _build_batched(self) -> BatchedLayout:
+        """Bucket the pair list by matricized (M, K, N) shape.
+
+        Unlike the csr layout there is NO padding: pairs only share a bucket
+        when their matricized shapes are exactly equal, so each bucket is one
+        regular [P, M, K] x [P, K, N] batched GEMM whose products segment-sum
+        into the bucket's output slots.  Different buckets may feed the same
+        output block (same kept sectors, different contracted sector dims);
+        the executor accumulates across buckets in Python — a handful of adds.
+        """
+        a_indices, _, _, b_indices = self.signature[:4]
+        groups: Dict[Tuple[int, int, int], List[Tuple[BlockKey, BlockKey, BlockKey]]] = {}
+        for ka, kb, kc in self.pairs:
+            m, k = self._mshape(a_indices, ka, self.keep_a, self.ax_a)
+            n = self._mshape(b_indices, kb, self.keep_b, self.ax_b)[0]
+            groups.setdefault((m, k, n), []).append((ka, kb, kc))
+
+        buckets: List[ShapeBucket] = []
+        num_unique = 0
+        num_out_slots = 0
+        for (m, k, n), prs in sorted(groups.items()):
+            prs = sorted(prs, key=lambda t: t[2])  # -> oi ascending
+            a_keys: List[BlockKey] = []
+            b_keys: List[BlockKey] = []
+            out_keys: List[BlockKey] = []
+            a_pos: Dict[BlockKey, int] = {}
+            b_pos: Dict[BlockKey, int] = {}
+            o_pos: Dict[BlockKey, int] = {}
+            li, ri, oi = [], [], []
+            for ka, kb, kc in prs:
+                if ka not in a_pos:
+                    a_pos[ka] = len(a_keys)
+                    a_keys.append(ka)
+                if kb not in b_pos:
+                    b_pos[kb] = len(b_keys)
+                    b_keys.append(kb)
+                if kc not in o_pos:
+                    o_pos[kc] = len(out_keys)
+                    out_keys.append(kc)
+                li.append(a_pos[ka])
+                ri.append(b_pos[kb])
+                oi.append(o_pos[kc])
+            li = np.array(li, np.int32)
+            ri = np.array(ri, np.int32)
+            p = len(prs)
+            buckets.append(
+                ShapeBucket(
+                    m=m,
+                    k=k,
+                    n=n,
+                    a_keys=tuple(a_keys),
+                    b_keys=tuple(b_keys),
+                    li=li,
+                    ri=ri,
+                    oi=np.array(oi, np.int32),
+                    out_keys=tuple(out_keys),
+                    li_identity=len(a_keys) == p and bool((li == np.arange(p)).all()),
+                    ri_identity=len(b_keys) == p and bool((ri == np.arange(p)).all()),
+                )
+            )
+            num_unique += len(a_keys) + len(b_keys)
+            num_out_slots += len(out_keys)
+        return BatchedLayout(
+            buckets=tuple(buckets),
+            num_unique=num_unique,
+            num_out_slots=num_out_slots,
+        )
+
+    @property
+    def batched(self) -> BatchedLayout:
+        if self._batched is None:
+            self._batched = self._build_batched()
+        return self._batched
 
     # ------------------------------------------------------- lazy dense layout
     def dense_out_slices(self) -> Tuple[Tuple[BlockKey, Tuple[slice, ...]], ...]:

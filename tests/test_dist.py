@@ -148,7 +148,7 @@ class TestPlanExecutionEquivalence:
         )
         ax = ((1, 2), (0, 1))
         ref = contract(A, B, axes=ax).to_dense()
-        for backend in ("list", "dense", "csr", "auto"):
+        for backend in ("list", "dense", "csr", "batched", "auto"):
             eng = ContractionEngine(
                 backend=backend, cache=PlanCache(), use_kernel=False
             )
