@@ -14,6 +14,14 @@ plans) and reports **compile/warmup and steady-state separately**:
 last ``TIMED`` sweeps, and jitted configs also record how many matvec
 retraces happened inside the timed window (0 == compile-once achieved).
 
+The run also splits each steady-state sweep into its two pipeline stages —
+contraction+Davidson vs decomposition (``*_decomp_stage_s``, the summed
+``svd_split`` wall time per sweep) — and runs a dedicated decomposition
+microbench at m=64: the same converged pair tensors split by the seed
+per-sector loop (``svd_split_unplanned``) vs the planned batched engine
+(``dist/decomp.py``), asserting their products agree to <1e-10 and
+recording the stage speedup (``decomp_stage`` in the JSON).
+
 Emits CSV rows (via benchmarks/run.py) and a JSON record at
 ``benchmarks/bench_dist.json`` so future PRs have a perf trajectory.  Must
 run in its own process with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
@@ -40,6 +48,68 @@ WARM = 4   # sweeps to reach structural steady state
 TIMED = 2  # sweeps averaged for the steady-state number
 
 
+def _bench_decomp_stage(fresh_engine, n, m64=64, warm_sweeps=3, reps=3):
+    """Decomposition-stage microbench at m=64: seed loop vs planned engine.
+
+    Converges a run at bond 64, rebuilds every pair tensor theta_j =
+    T_j · T_{j+1}, and times the full set of splits through the seed
+    per-sector loop (``svd_split_unplanned``) vs the planned batched engine
+    (jit-warmed), blocking on every output block so jax's async dispatch
+    cannot hide device work.  Asserts the two paths' absorbed products agree
+    block-for-block to <1e-10 first (the gauge-invariant equality check).
+    """
+    import numpy as np
+
+    from repro.dist.decomp import DecompositionEngine
+    from repro.dist.plan import DecompPlanCache
+    from repro.tensor.blocksparse import contract, svd_split_unplanned
+
+    eng = fresh_engine(algo="list")
+    for _ in range(warm_sweeps):
+        eng.sweep(max_bond=m64)
+    T = eng.mps.tensors
+    thetas = [eng.contract_fn(T[j], T[j + 1], ((2,), (0,))) for j in range(n - 1)]
+
+    deng = DecompositionEngine(cache=DecompPlanCache())
+
+    def run_all(split):
+        outs = [split(th, 2, m64)[:2] for th in thetas]
+        for U, V in outs:
+            for b in U.blocks.values():
+                b.block_until_ready()
+            for b in V.blocks.values():
+                b.block_until_ready()
+        return outs
+
+    ref = run_all(svd_split_unplanned)  # warm numpy/lazy caches
+    got = run_all(deng.svd_split)       # build plans + compile cores
+    max_diff = 0.0
+    for (Ur, Vr), (Up, Vp) in zip(ref, got):
+        pr = np.asarray(contract(Ur, Vr, ((2,), (0,))).to_dense())
+        pp = np.asarray(contract(Up, Vp, ((2,), (0,))).to_dense())
+        max_diff = max(max_diff, float(np.max(np.abs(pr - pp))))
+    assert max_diff < 1e-10, f"planned/seed split products diverge: {max_diff}"
+
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        run_all(svd_split_unplanned)
+    seed_s = (time.perf_counter() - t0) / reps
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        run_all(deng.svd_split)
+    planned_s = (time.perf_counter() - t0) / reps
+    return {
+        "max_bond": m64,
+        "n_thetas": len(thetas),
+        "reps": reps,
+        "seed_per_sector_s": seed_s,
+        "planned_batched_s": planned_s,
+        "speedup": seed_s / max(planned_s, 1e-12),
+        "max_product_diff": max_diff,
+        "decomp_stats": deng.stats(),
+    }
+
+
 def _bench(n=16, m=32, quick=False):
     import jax
 
@@ -61,7 +131,8 @@ def _bench(n=16, m=32, quick=False):
         return DMRGEngine(mps, mpo, davidson_iters=2, **kw)
 
     def timed_sweeps(eng, warm=WARM, timed=TIMED, bond=m):
-        """(first_sweep_s, steady_sweep_s, energy, timed-window retraces)."""
+        """(first_sweep_s, steady_sweep_s, energy, timed-window retraces,
+        steady decomposition-stage seconds per sweep)."""
         t0 = time.perf_counter()
         eng.sweep(max_bond=bond)
         first = time.perf_counter() - t0
@@ -69,11 +140,13 @@ def _bench(n=16, m=32, quick=False):
             eng.sweep(max_bond=bond)
         rt0 = getattr(eng.contract_fn, "jit_retraces", 0)
         t0 = time.perf_counter()
+        svd_s = 0.0
         for _ in range(timed):
             s = eng.sweep(max_bond=bond)
+            svd_s += s.svd_seconds
         steady = (time.perf_counter() - t0) / timed
         rt1 = getattr(eng.contract_fn, "jit_retraces", 0)
-        return first, steady, float(s.energy), rt1 - rt0
+        return first, steady, float(s.energy), rt1 - rt0, svd_s / timed
 
     rec = {
         "n_sites": n,
@@ -86,25 +159,32 @@ def _bench(n=16, m=32, quick=False):
 
     cache = PlanCache()
     eng = fresh_engine(engine=ContractionEngine(backend="list", cache=cache))
-    t1_plan, t_plan, e_plan, _ = timed_sweeps(eng)
+    t1_plan, t_plan, e_plan, _, d_plan = timed_sweeps(eng)
     rec["planned_first_sweep_s"] = t1_plan
     rec["planned_sweep_s"] = t_plan
+    # stage split: decomposition (svd_split wall clock) vs everything else
+    rec["planned_decomp_stage_s"] = d_plan
+    rec["planned_contract_stage_s"] = t_plan - d_plan
+    rec["planned_decomp_stats"] = eng.contract_fn.stats()["decomp"]
     rec["plan_cache"] = cache.stats()
     rec["energy"] = e_plan
 
     # tentpole config: shape-bucketed batched backend + compile-once
     # (bucket-padded) jitted matvec
     eng = fresh_engine(algo="batched", jit_matvec=True)
-    t1_b, t_b, e_b, rt_b = timed_sweeps(eng)
+    t1_b, t_b, e_b, rt_b, d_b = timed_sweeps(eng)
     rec["batched_first_sweep_s"] = t1_b
     rec["batched_sweep_s"] = t_b
+    rec["batched_decomp_stage_s"] = d_b
+    rec["batched_contract_stage_s"] = t_b - d_b
     rec["batched_timed_retraces"] = rt_b
     rec["batched_total_retraces"] = eng.contract_fn.jit_retraces
+    rec["batched_svd_retraces"] = eng.contract_fn.decomp.jit_retraces
     rec["batched_speedup"] = t_plan / max(t_b, 1e-12)
     rec["batched_energy_diff"] = abs(e_b - e_plan)
 
     eng = fresh_engine(algo="list", jit_matvec=True)
-    t1_jit, t_jit, e_jit, rt_jit = timed_sweeps(eng)
+    t1_jit, t_jit, e_jit, rt_jit, _ = timed_sweeps(eng)
     rec["planned_jit_first_sweep_s"] = t1_jit
     rec["planned_jit_sweep_s"] = t_jit
     rec["planned_jit_timed_retraces"] = rt_jit
@@ -114,28 +194,30 @@ def _bench(n=16, m=32, quick=False):
     assert abs(e_b - e_plan) < 1e-10, (e_b, e_plan)
     assert abs(e_jit - e_plan) < 1e-10, (e_jit, e_plan)
 
+    rec["decomp_stage"] = _bench_decomp_stage(fresh_engine, n)
+
     if not quick:
         # the seed per-call algorithm is ~20x the planned engine, so it is
         # sampled at sweep 2 (warm=1, timed=1) rather than swept to steady
         # state — the ratio is labeled with its protocol
-        t1_seed, t_seed, e_seed, _ = timed_sweeps(
+        t1_seed, t_seed, e_seed, _, _ = timed_sweeps(
             fresh_engine(algo="list_unplanned"), warm=1, timed=1
         )
         rec["seed_unplanned_sweep_s"] = t_seed
         rec["seed_unplanned_protocol"] = {"warm": 1, "timed": 1}
         # like-for-like ratio: planned engine sampled at the same sweep 2
-        _, t_plan2, e_plan2, _ = timed_sweeps(
+        _, t_plan2, e_plan2, _, _ = timed_sweeps(
             fresh_engine(algo="list"), warm=1, timed=1
         )
         rec["planned_sweep2_s"] = t_plan2
         rec["plan_speedup_sweep2"] = t_seed / max(t_plan2, 1e-12)
 
         eng = fresh_engine(algo="batched")
-        _, t_be, e_be, _ = timed_sweeps(eng)
+        _, t_be, e_be, _, _ = timed_sweeps(eng)
         rec["batched_eager_sweep_s"] = t_be
         rec["batched_eager_stats"] = eng.contract_fn.stats()["backend_seconds"]
 
-        _, t_auto, e_auto, _ = timed_sweeps(fresh_engine(algo="auto"))
+        _, t_auto, e_auto, _, _ = timed_sweeps(fresh_engine(algo="auto"))
         rec["auto_sweep_s"] = t_auto
 
         # sharded smoke on a reduced workload: on fake CPU devices the
@@ -231,7 +313,15 @@ def _run(quick=False, write_json=True):
             "dist_batched_jit_sweep",
             rec["batched_sweep_s"] * 1e6,
             f"speedup={rec['batched_speedup']:.2f}x;"
-            f"timed_retraces={rec['batched_timed_retraces']}",
+            f"timed_retraces={rec['batched_timed_retraces']};"
+            f"decomp_stage_s={rec['batched_decomp_stage_s']:.3f}",
+        ),
+        (
+            "dist_decomp_stage_m64",
+            rec["decomp_stage"]["planned_batched_s"] * 1e6,
+            f"speedup_vs_seed={rec['decomp_stage']['speedup']:.2f}x;"
+            f"seed_s={rec['decomp_stage']['seed_per_sector_s']:.3f};"
+            f"product_diff={rec['decomp_stage']['max_product_diff']:.1e}",
         ),
         (
             "dist_planned_jit_sweep",

@@ -27,6 +27,12 @@ def main(argv=None):
                     default="list")
     ap.add_argument("--jit-matvec", action="store_true",
                     help="jit the planned two-site matvec")
+    ap.add_argument("--svd-method",
+                    choices=["svd", "randomized", "auto", "unplanned"],
+                    default=None,
+                    help="decomposition stage: planned batched SVD (default "
+                         "for engine algos), randomized sketch, cost-model "
+                         "auto, or the seed per-sector loop")
     ap.add_argument("--shard", action="store_true",
                     help="mesh-shard blocks over all visible devices "
                          "(pair with XLA_FLAGS=--xla_force_host_platform_"
@@ -39,6 +45,11 @@ def main(argv=None):
     if args.algo.endswith("_unplanned") and (args.shard or args.jit_matvec):
         ap.error("--shard/--jit-matvec require an engine algo, "
                  "not " + args.algo)
+    if args.algo.endswith("_unplanned") and args.svd_method not in (
+        None, "unplanned",
+    ):
+        ap.error("--svd-method " + args.svd_method
+                 + " requires an engine algo, not " + args.algo)
 
     from repro.core import run_dmrg
     from repro.core.models import electron_system, spin_system
@@ -61,7 +72,8 @@ def main(argv=None):
     res = run_dmrg(space, terms, n, bond_schedule=schedule,
                    sweeps_per_bond=args.sweeps_per_bond,
                    davidson_iters=4, algo=args.algo, verbose=True,
-                   jit_matvec=args.jit_matvec, shard_policy=shard_policy)
+                   jit_matvec=args.jit_matvec, shard_policy=shard_policy,
+                   svd_method=args.svd_method)
     print(f"\nground-state energy estimate: {res.energy:.10f}")
     print(f"energy per site:              {res.energy / n:.10f}")
 

@@ -1,0 +1,89 @@
+"""Docs checks for CI: markdown link resolution + quickstart extraction.
+
+Two modes:
+
+  python scripts/check_docs.py --links README.md DESIGN.md ...
+      Fails (exit 1) if any relative markdown link target in the given
+      files does not exist on disk.  External links (http/https/mailto)
+      and pure in-page anchors (#...) are skipped; a #fragment on a
+      relative path is stripped before the existence check.
+
+  python scripts/check_docs.py --extract <section> README.md
+      Prints every fenced ``bash`` code block found under the given
+      markdown heading (e.g. "Quickstart") until the next same-or-higher
+      level heading — CI pipes this into bash to smoke-execute the
+      commands the README actually shows.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check_links(paths):
+    bad = []
+    for p in paths:
+        path = Path(p)
+        text = path.read_text()
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (path.parent / rel).exists():
+                bad.append(f"{p}: broken link -> {target}")
+    for line in bad:
+        print(line)
+    print(f"checked {len(paths)} files: {'FAIL' if bad else 'ok'}")
+    return 1 if bad else 0
+
+
+def extract_section_bash(section, path):
+    """Print bash code blocks under `## <section>` (any heading level)."""
+    lines = Path(path).read_text().splitlines()
+    level = None
+    in_section = False
+    in_block = False
+    found = False
+    for line in lines:
+        m = re.match(r"^(#+)\s+(.*)$", line)
+        if m and not in_block:
+            if in_section and len(m.group(1)) <= level:
+                break
+            if m.group(2).strip().lower() == section.lower():
+                in_section = True
+                level = len(m.group(1))
+            continue
+        if not in_section:
+            continue
+        if line.strip().startswith("```"):
+            lang = line.strip().lstrip("`").strip()
+            if in_block:
+                in_block = False
+            elif lang in ("bash", "sh", ""):
+                in_block = True
+                found = True
+            continue
+        if in_block:
+            print(line)
+    if not found:
+        print(f"echo 'no bash blocks under section {section!r} in {path}' && exit 1")
+        return 1
+    return 0
+
+
+def main(argv):
+    if len(argv) >= 2 and argv[0] == "--links":
+        return check_links(argv[1:])
+    if len(argv) == 3 and argv[0] == "--extract":
+        return extract_section_bash(argv[1], argv[2])
+    print(__doc__)
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

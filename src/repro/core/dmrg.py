@@ -44,6 +44,7 @@ def run_dmrg(
     jit_matvec: bool = False,
     pad_matvec: Optional[bool] = None,
     shard_policy: Optional[BlockShardPolicy] = None,
+    svd_method: Optional[str] = None,
 ) -> DMRGResult:
     mpo = build_mpo(space, terms, n_sites, dtype=dtype)
     if mpo_cutoff is not None:
@@ -58,6 +59,7 @@ def run_dmrg(
         jit_matvec=jit_matvec,
         pad_matvec=pad_matvec,
         shard_policy=shard_policy,
+        svd_method=svd_method,
     )
 
     stats: List[SweepStats] = []

@@ -30,7 +30,10 @@ def get_contractor(algo: str) -> Callable:
 
     The returned object is callable as ``fn(a, b, axes)`` exactly like the
     bare contraction functions it replaces; sweep code that wants the engine
-    extras (jitted matvec, sharding policy, stats) can use them when present.
+    extras (jitted matvec, sharding policy, the planned ``svd_split``
+    decomposition stage, stats) can use them when present.  Engine-backed
+    names carry the <1e-10 seed-equality guarantee of ``dist.engine``; the
+    ``*_unplanned`` names ARE the seed algorithms.
     """
     if algo in ("list", "dense", "batched"):
         return ContractionEngine(backend=algo)

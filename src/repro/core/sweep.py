@@ -10,6 +10,13 @@ with bucket-padded operands so it compiles once per quantized structure
 (``pad_matvec``, defaulting to the jit flag), and a ``BlockShardPolicy``
 that keeps MPS/MPO/environment blocks mesh-sharded, mirroring the paper's
 distribute-every-block-over-all-processors layout.
+
+The decomposition stage goes through the engine too (``svd_method``): the
+planned batched SVD (``dist/decomp.py``) by default, the seed per-sector
+loop with ``svd_method="unplanned"``, or the randomized path
+("randomized"/"auto") — so ``_optimize_pair`` stays in device-land from the
+matvec through the split, with one host sync per split for truncation.
+``SweepStats.svd_seconds`` reports the stage's wall-clock per sweep.
 """
 from __future__ import annotations
 
@@ -20,7 +27,12 @@ from typing import Callable, List, Optional
 from ..dist.batch import pad_block_sparse, unpad_block_sparse
 from ..dist.engine import ContractionEngine
 from ..dist.shard import BlockShardPolicy
-from ..tensor.blocksparse import BlockSparseTensor, contract, flip_flow, svd_split
+from ..tensor.blocksparse import (
+    BlockSparseTensor,
+    contract,
+    flip_flow,
+    svd_split_unplanned,
+)
 from .davidson import davidson
 from .env import (
     extend_left,
@@ -41,6 +53,12 @@ class SweepStats:
     seconds: float
     site_seconds: List[float]
     site_energies: List[float]
+    # wall-clock of the decomposition stage (all svd_split calls) this sweep,
+    # in seconds — the per-stage split bench_dist.py reports.  For the
+    # planned path this includes the singular-value device sync, so it
+    # reflects real SVD compute; the remainder of ``seconds`` is
+    # contraction + Davidson + environment work.
+    svd_seconds: float = 0.0
 
 
 class DMRGEngine:
@@ -57,6 +75,7 @@ class DMRGEngine:
         pad_matvec: Optional[bool] = None,
         shard_policy: Optional[BlockShardPolicy] = None,
         engine: Optional[Callable] = None,
+        svd_method: Optional[str] = None,
     ):
         assert mps.n_sites == len(mpo)
         self.mps = mps
@@ -70,11 +89,27 @@ class DMRGEngine:
         # the MPO is immutable for the run — pad each site tensor once,
         # not on every pair optimization
         self._mpo_padded: List[Optional[BlockSparseTensor]] = [None] * len(mpo)
-        if not isinstance(self.contract_fn, ContractionEngine):
+        if svd_method not in (None, "unplanned", "svd", "randomized", "auto"):
+            raise ValueError(f"unknown svd_method: {svd_method!r}")
+        if isinstance(self.contract_fn, ContractionEngine):
+            # decomposition stage: engines route svd_split through their
+            # planned DecompositionEngine ("svd" exact, "randomized", "auto"
+            # cost model); "unplanned" forces the seed per-sector loop.  The
+            # svd_method and shard_policy parameters are the single source of
+            # truth: set them on the engine, or reset configuration left over
+            # from a previous DMRGEngine that reused this engine instance
+            self.svd_planned = svd_method != "unplanned"
+            self.contract_fn.decomp.method = (
+                svd_method if svd_method in ("svd", "randomized", "auto")
+                else "svd"
+            )
+            self.contract_fn.policy = shard_policy
+        else:
             # bare contractors (the *_unplanned algos, or a plain callable
             # passed via engine=) have no gather step (sharded blocks would
-            # deadlock eager CPU collectives) and no jit pipeline; fail
-            # loudly instead of hanging / silently ignoring the flag
+            # deadlock eager CPU collectives), no jit pipeline and no planned
+            # decomposition; fail loudly instead of hanging / silently
+            # ignoring the flag
             backend = (
                 f"algo={algo!r}" if engine is None
                 else f"engine={type(engine).__name__}"
@@ -89,11 +124,13 @@ class DMRGEngine:
                     f"jit_matvec requires a ContractionEngine backend, "
                     f"not {backend}"
                 )
-        if isinstance(self.contract_fn, ContractionEngine):
-            # the shard_policy parameter is the single source of truth: set it
-            # on the engine, or clear a policy left over from a previous
-            # DMRGEngine that reused the same ContractionEngine instance
-            self.contract_fn.policy = shard_policy
+            if svd_method not in (None, "unplanned"):
+                raise ValueError(
+                    f"svd_method={svd_method!r} requires a ContractionEngine "
+                    f"backend, not {backend}; bare contractors use the seed "
+                    f"svd_split_unplanned"
+                )
+            self.svd_planned = False
         if shard_policy is not None:
             self.mps.tensors = shard_policy.place_mps(self.mps.tensors)
             self.mpo = shard_policy.place_mps(self.mpo)
@@ -158,12 +195,22 @@ class DMRGEngine:
         )
         if pad:
             theta = unpad_block_sparse(theta, orig_indices)
-        U, V, _, err = svd_split(
-            theta, 2, max_bond=max_bond, cutoff=cutoff, absorb=absorb
-        )
+        # decomposition stage: planned engines stay in device-land — one
+        # batched SVD core call plus a single singular-value sync for the
+        # global truncation — while the seed path loops sectors on host
+        t_svd = time.perf_counter()
+        if self.svd_planned:
+            U, V, _, err = self.contract_fn.svd_split(
+                theta, 2, max_bond=max_bond, cutoff=cutoff, absorb=absorb
+            )
+        else:
+            U, V, _, err = svd_split_unplanned(
+                theta, 2, max_bond=max_bond, cutoff=cutoff, absorb=absorb
+            )
+        svd_dt = time.perf_counter() - t_svd
         T[j] = self._place(flip_flow(U, 2))
         T[j + 1] = self._place(flip_flow(V, 0))
-        return lam, err
+        return lam, err, svd_dt
 
     def sweep(self, max_bond: int, cutoff: float = 1e-12) -> SweepStats:
         """One full left-to-right + right-to-left sweep; returns stats."""
@@ -171,27 +218,30 @@ class DMRGEngine:
         n = self.n
         energies, site_secs = [], []
         max_err = 0.0
+        svd_secs = 0.0
         t0 = time.perf_counter()
 
         for j in range(n - 1):  # left -> right
             ts = time.perf_counter()
-            lam, err = self._optimize_pair(j, max_bond, cutoff, absorb="right")
+            lam, err, svd_dt = self._optimize_pair(j, max_bond, cutoff, absorb="right")
             self.left_envs[j + 1] = self._place(extend_left(
                 self.left_envs[j], T[j], W[j], self.contract_fn
             ))
             energies.append(lam)
             site_secs.append(time.perf_counter() - ts)
             max_err = max(max_err, err)
+            svd_secs += svd_dt
 
         for j in range(n - 2, -1, -1):  # right -> left
             ts = time.perf_counter()
-            lam, err = self._optimize_pair(j, max_bond, cutoff, absorb="left")
+            lam, err, svd_dt = self._optimize_pair(j, max_bond, cutoff, absorb="left")
             self.right_envs[j] = self._place(extend_right(
                 self.right_envs[j + 1], T[j + 1], W[j + 1], self.contract_fn
             ))
             energies.append(lam)
             site_secs.append(time.perf_counter() - ts)
             max_err = max(max_err, err)
+            svd_secs += svd_dt
 
         return SweepStats(
             energy=energies[-1],
@@ -200,4 +250,5 @@ class DMRGEngine:
             seconds=time.perf_counter() - t0,
             site_seconds=site_secs,
             site_energies=energies,
+            svd_seconds=svd_secs,
         )

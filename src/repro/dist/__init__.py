@@ -1,33 +1,59 @@
-"""Distributed contraction engine (DESIGN.md Sec. 3).
+"""Distributed contraction + decomposition engines (DESIGN.md Sec. 3).
 
-Three layers, mirroring the paper's separation of symbolic planning from
-numeric execution:
+Layers, mirroring the paper's separation of symbolic planning from numeric
+execution:
 
 - ``plan``:   ``ContractionPlan`` — the static (lhs, rhs) -> out block-pair
-              table, output indices/charges and matricized shapes, derived
-              once per block structure and cached by structural signature.
+              table, output indices/charges and matricized shapes — and
+              ``DecompositionPlan`` — sector grouping, row/col layouts and
+              the gather tables of the blockwise SVD — each derived once per
+              block structure and cached by structural signature.
 - ``shard``:  ``BlockShardPolicy`` — places each block's row/column modes on
               mesh axes (the paper's "every block over all processors"
               layout), with divisibility-aware fallback to replication.
-- ``batch``:  shape-bucketed batched execution (stacked same-shape GEMMs +
-              segment-sum scatter) and the power-of-two sector padding that
-              makes the jitted matvec compile once instead of per site.
+- ``batch``:  shape-bucketed batched contraction execution (stacked
+              same-shape GEMMs + segment-sum scatter) and the power-of-two
+              sector padding that makes the jitted matvec compile once.
+- ``decomp``: ``DecompositionEngine`` — the blockwise truncated SVD executed
+              as one batched ``jnp.linalg.svd`` per padded shape bucket,
+              with a single host sync for the global truncation and an
+              optional randomized-SVD path.
 - ``engine``: ``ContractionEngine`` — executes plans through a pluggable
               list / dense / csr / batched backend chosen by a
-              flop-and-dispatch cost model, and jits the planned two-site
-              matvec.
+              flop-and-dispatch cost model, jits the planned two-site
+              matvec, and fronts the decomposition engine (``svd_split``).
+
+All execution paths compute the same physics: every backend and the planned
+SVD agree with the seed algorithms to <1e-10 (tests/test_dist.py,
+tests/test_batch.py, tests/test_decomp.py).
 """
 from .batch import pad_block_sparse, unpad_block_sparse
+from .decomp import DecompositionEngine, svd_split_planned
 from .engine import ContractionEngine
-from .plan import ContractionPlan, PlanCache, get_plan, global_plan_cache
+from .plan import (
+    ContractionPlan,
+    DecompPlanCache,
+    DecompositionPlan,
+    PlanCache,
+    get_decomp_plan,
+    get_plan,
+    global_decomp_cache,
+    global_plan_cache,
+)
 from .shard import BlockShardPolicy, make_block_mesh
 
 __all__ = [
     "ContractionEngine",
     "ContractionPlan",
+    "DecompositionEngine",
+    "DecompositionPlan",
+    "DecompPlanCache",
     "PlanCache",
     "get_plan",
+    "get_decomp_plan",
     "global_plan_cache",
+    "global_decomp_cache",
+    "svd_split_planned",
     "BlockShardPolicy",
     "make_block_mesh",
     "pad_block_sparse",

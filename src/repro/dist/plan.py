@@ -1,4 +1,4 @@
-"""Contraction plans: the static, cacheable half of a block-sparse contraction.
+"""Contraction and decomposition plans: the static, cacheable half.
 
 Everything the list / dense / csr algorithms derive from quantum numbers —
 the (lhs, rhs) -> out block-pair table, output indices and charge, output
@@ -9,6 +9,12 @@ b block keys, axes)``.  The seed code re-derived all of it in Python on every
 sweep.  A ``ContractionPlan`` computes it once and a ``PlanCache`` keyed by
 that structural signature reuses it for the whole sweep (the analogue of
 CTF's one-time output-sparsity precomputation, paper Sec. IV-B).
+
+The same split applies to the blockwise truncated SVD (paper Fig. 1e): a
+``DecompositionPlan`` precomputes sector grouping, row/column layouts and
+the gather tables that assemble each padded sector-matrix stack, cached in
+a ``DecompPlanCache`` by the analogous ``decomp_signature``; execution lives
+in ``dist/decomp.py``.
 
 Plans hold only Python/numpy metadata — no jax arrays — so building them
 never touches a device and they are safe to share across jit traces (block
@@ -23,7 +29,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..tensor.blocksparse import BlockKey, BlockSparseTensor
-from ..tensor.qn import Charge, Index, qadd
+from ..tensor.qn import Charge, Index, qadd, qscale, qzero
 
 PlanSignature = Tuple
 
@@ -58,6 +64,25 @@ def _prod(xs) -> int:
     for x in xs:
         out *= int(x)
     return out
+
+
+def bucket_dim(d: int) -> int:
+    """Round a dimension up to the next power of two (shape-bucket size)."""
+    p = 1
+    while p < d:
+        p *= 2
+    return p
+
+
+def svd_flop_estimate(rp: int, cp: int) -> float:
+    """~LAPACK gesdd flop estimate for one [rp, cp] economy SVD.
+
+    Single source of truth for the decomposition cost model: used for
+    ``DecompositionPlan.svd_flops`` and by the engine's auto rsvd-vs-svd
+    choice and ``svd_flops`` stats counter (dist/decomp.py).
+    """
+    kp = min(rp, cp)
+    return 8.0 * rp * cp * kp + 9.0 * kp**3
 
 
 @dataclasses.dataclass
@@ -396,26 +421,253 @@ class ContractionPlan:
         return tuple(ix.sector_dim(s) for ix, s in zip(self.out_indices, kc))
 
 
-class PlanCache:
-    """LRU cache of ContractionPlans keyed by structural signature."""
+# ------------------------------------------------------------ decomposition
+def decomp_signature(theta: BlockSparseTensor, n_row_modes: int) -> PlanSignature:
+    """Structural signature of a blockwise SVD split.
+
+    Everything a ``DecompositionPlan`` precomputes — sector grouping,
+    row/column layouts, gather tables, padded bucket shapes — is a pure
+    function of ``(theta.indices, theta.charge, theta block keys,
+    n_row_modes)``, exactly like ``plan_signature`` for contractions.
+    """
+    return (
+        theta.indices,
+        theta.charge,
+        tuple(sorted(theta.blocks)),
+        n_row_modes,
+    )
+
+
+@dataclasses.dataclass
+class SectorSplit:
+    """Row/column layout of one fused-charge sector of the matricized theta.
+
+    The sector matrix is ``[R, C]``: rows are the concatenation (in
+    ``row_keys`` order) of the matricized row-mode blocks, columns likewise
+    for the column modes — the same layout the seed ``svd_split`` builds with
+    one ``.at[].set()`` per block.
+    """
+
+    q: Charge
+    row_keys: Tuple[BlockKey, ...]       # sorted row-part keys
+    col_keys: Tuple[BlockKey, ...]       # sorted col-part keys
+    rdims: Tuple[int, ...]               # matricized row dim per row key
+    cdims: Tuple[int, ...]               # matricized col dim per col key
+    roffs: Tuple[int, ...]               # row offset per row key
+    coffs: Tuple[int, ...]               # col offset per col key
+    R: int                               # total (unpadded) rows
+    C: int                               # total (unpadded) cols
+    bucket: int = -1                     # index into plan.buckets
+    slot: int = -1                       # stack position within the bucket
+
+    @property
+    def K(self) -> int:
+        """True rank bound min(R, C): number of real singular values."""
+        return min(self.R, self.C)
+
+
+@dataclasses.dataclass
+class SvdBucket:
+    """All sectors sharing one padded matrix shape (Rp, Cp).
+
+    The bucket executes as ONE batched ``jnp.linalg.svd`` over the stacked
+    ``[S, Rp, Cp]`` sector matrices, assembled with a single gather from the
+    flattened theta blocks (``gather`` indexes into the flat concatenation,
+    with the one-past-the-end slot reading the appended zero — structural
+    zeros and padding both land there).
+    """
+
+    rp: int                              # padded rows (bucket_dim(R))
+    cp: int                              # padded cols (bucket_dim(C))
+    sectors: Tuple[int, ...]             # indices into plan.sectors, stack order
+    gather: np.ndarray                   # [S, rp, cp] int32 into flat_ext
+    k_true: np.ndarray                   # [S] int32: min(R, C) per sector
+
+    @property
+    def kp(self) -> int:
+        """Padded singular-value count min(rp, cp) per stacked sector."""
+        return min(self.rp, self.cp)
+
+
+@dataclasses.dataclass
+class DecompositionPlan:
+    """Precomputed symbolic structure of one blockwise truncated SVD.
+
+    Holds only Python/numpy metadata (no jax arrays), like
+    ``ContractionPlan``; building one never touches a device.  Executed by
+    ``dist.decomp.DecompositionEngine``, whose batched path is guaranteed to
+    match the seed ``svd_split_unplanned`` to <1e-10 up to the per-singular-
+    vector sign gauge (products U·V, singular values and truncation error
+    agree unconditionally).
+    """
+
+    signature: PlanSignature
+    n_row_modes: int
+    row_ix: Tuple[Index, ...]
+    col_ix: Tuple[Index, ...]
+    block_order: Tuple[BlockKey, ...]    # canonical (sorted) flattening order
+    block_offsets: Tuple[int, ...]       # flat offset per block, same order
+    nnz: int                             # total elements across blocks
+    sectors: Tuple[SectorSplit, ...]     # sorted by fused charge (seed order)
+    buckets: Tuple[SvdBucket, ...]
+    svd_flops: float                     # full-SVD flop estimate over buckets
+    # compiled executables keyed by (absorb, per-bucket method, sketch size);
+    # stored on the plan (like CsrLayout.dev_idx) so engines sharing the
+    # global cache also share compiles
+    _exec: Dict = dataclasses.field(default_factory=dict)
+
+    # ------------------------------------------------------------------ build
+    @staticmethod
+    def build(theta: BlockSparseTensor, n_row_modes: int) -> "DecompositionPlan":
+        if not theta.blocks:
+            raise ValueError("svd_split of a tensor with no blocks")
+        indices = theta.indices
+        row_ix = indices[:n_row_modes]
+        col_ix = indices[n_row_modes:]
+
+        block_order = tuple(sorted(theta.blocks))
+        offsets: List[int] = []
+        acc = 0
+        sizes: Dict[BlockKey, int] = {}
+        for k in block_order:
+            offsets.append(acc)
+            sz = _prod(indices[i].sector_dim(s) for i, s in enumerate(k))
+            sizes[k] = sz
+            acc += sz
+        nnz = acc
+
+        # group block keys by fused row charge (flow-weighted), as the seed
+        groups: Dict[Charge, List[BlockKey]] = {}
+        for k in block_order:
+            q = qzero(indices[0].nq)
+            for ix, s in zip(row_ix, k[:n_row_modes]):
+                q = qadd(q, qscale(ix.charge(s), ix.flow))
+            groups.setdefault(q, []).append(k)
+
+        sectors: List[SectorSplit] = []
+        sector_keys: List[List[BlockKey]] = []
+        for q, keys in sorted(groups.items()):
+            row_keys = sorted({k[:n_row_modes] for k in keys})
+            col_keys = sorted({k[n_row_modes:] for k in keys})
+            rdims = tuple(
+                _prod([ix.sector_dim(s) for ix, s in zip(row_ix, rk)] or [1])
+                for rk in row_keys
+            )
+            cdims = tuple(
+                _prod([ix.sector_dim(s) for ix, s in zip(col_ix, ck)] or [1])
+                for ck in col_keys
+            )
+            roffs, a = [], 0
+            for d in rdims:
+                roffs.append(a)
+                a += d
+            R = a
+            coffs, a = [], 0
+            for d in cdims:
+                coffs.append(a)
+                a += d
+            C = a
+            sectors.append(
+                SectorSplit(
+                    q=q,
+                    row_keys=tuple(row_keys),
+                    col_keys=tuple(col_keys),
+                    rdims=rdims,
+                    cdims=cdims,
+                    roffs=tuple(roffs),
+                    coffs=tuple(coffs),
+                    R=R,
+                    C=C,
+                )
+            )
+            sector_keys.append(keys)
+
+        # bucket sectors by padded (Rp, Cp); build one gather table per bucket
+        by_shape: Dict[Tuple[int, int], List[int]] = {}
+        for si, sec in enumerate(sectors):
+            by_shape.setdefault((bucket_dim(sec.R), bucket_dim(sec.C)), []).append(si)
+
+        buckets: List[SvdBucket] = []
+        svd_flops = 0.0
+        key_offset = {k: o for k, o in zip(block_order, offsets)}
+        for (rp, cp), sec_ids in sorted(by_shape.items()):
+            gather = np.full((len(sec_ids), rp, cp), nnz, np.int32)
+            for slot, si in enumerate(sec_ids):
+                sec = sectors[si]
+                sec.bucket = len(buckets)
+                sec.slot = slot
+                rpos = {rk: i for i, rk in enumerate(sec.row_keys)}
+                cpos = {ck: i for i, ck in enumerate(sec.col_keys)}
+                for k in sector_keys[si]:
+                    ri = rpos[k[:n_row_modes]]
+                    ci = cpos[k[n_row_modes:]]
+                    rd, cd = sec.rdims[ri], sec.cdims[ci]
+                    # block elements are already in (row-modes, col-modes)
+                    # C order, so the flat block reshapes to [rd, cd] directly
+                    idx = key_offset[k] + np.arange(rd * cd, dtype=np.int32)
+                    gather[
+                        slot,
+                        sec.roffs[ri] : sec.roffs[ri] + rd,
+                        sec.coffs[ci] : sec.coffs[ci] + cd,
+                    ] = idx.reshape(rd, cd)
+            svd_flops += len(sec_ids) * svd_flop_estimate(rp, cp)
+            buckets.append(
+                SvdBucket(
+                    rp=rp,
+                    cp=cp,
+                    sectors=tuple(sec_ids),
+                    gather=gather,
+                    k_true=np.array(
+                        [sectors[si].K for si in sec_ids], np.int32
+                    ),
+                )
+            )
+
+        return DecompositionPlan(
+            signature=decomp_signature(theta, n_row_modes),
+            n_row_modes=n_row_modes,
+            row_ix=tuple(row_ix),
+            col_ix=tuple(col_ix),
+            block_order=block_order,
+            block_offsets=tuple(offsets),
+            nnz=nnz,
+            sectors=tuple(sectors),
+            buckets=tuple(buckets),
+            svd_flops=svd_flops,
+        )
+
+    @property
+    def num_sectors(self) -> int:
+        return len(self.sectors)
+
+    @property
+    def num_buckets(self) -> int:
+        return len(self.buckets)
+
+
+# ------------------------------------------------------------------- caches
+class _SignatureLRU:
+    """LRU cache of plans keyed by structural signature.
+
+    ``hits``/``misses`` count lookups; ``size`` is live entries.  Shared
+    machinery for contraction and decomposition plans — subclasses provide
+    ``_signature`` and ``_build``.
+    """
 
     def __init__(self, maxsize: int = 4096):
         self.maxsize = maxsize
-        self._plans: "OrderedDict[PlanSignature, ContractionPlan]" = OrderedDict()
+        self._plans: OrderedDict = OrderedDict()
         self.hits = 0
         self.misses = 0
 
-    def get(
-        self, a: BlockSparseTensor, b: BlockSparseTensor, axes: Axes
-    ) -> ContractionPlan:
-        sig = plan_signature(a, b, axes)
+    def _get(self, sig, build):
         plan = self._plans.get(sig)
         if plan is not None:
             self.hits += 1
             self._plans.move_to_end(sig)
             return plan
         self.misses += 1
-        plan = ContractionPlan.build(a, b, axes)
+        plan = build()
         self._plans[sig] = plan
         while len(self._plans) > self.maxsize:
             self._plans.popitem(last=False)
@@ -433,7 +685,26 @@ class PlanCache:
         return {"hits": self.hits, "misses": self.misses, "size": len(self._plans)}
 
 
+class PlanCache(_SignatureLRU):
+    """LRU cache of ContractionPlans keyed by structural signature."""
+
+    def get(
+        self, a: BlockSparseTensor, b: BlockSparseTensor, axes: Axes
+    ) -> ContractionPlan:
+        sig = plan_signature(a, b, axes)
+        return self._get(sig, lambda: ContractionPlan.build(a, b, axes))
+
+
+class DecompPlanCache(_SignatureLRU):
+    """LRU cache of DecompositionPlans keyed by structural signature."""
+
+    def get(self, theta: BlockSparseTensor, n_row_modes: int) -> DecompositionPlan:
+        sig = decomp_signature(theta, n_row_modes)
+        return self._get(sig, lambda: DecompositionPlan.build(theta, n_row_modes))
+
+
 global_plan_cache = PlanCache()
+global_decomp_cache = DecompPlanCache()
 
 
 def get_plan(
@@ -442,4 +713,14 @@ def get_plan(
     axes: Axes,
     cache: Optional[PlanCache] = None,
 ) -> ContractionPlan:
+    """Fetch (or build) the ContractionPlan for this structural signature."""
     return (cache or global_plan_cache).get(a, b, axes)
+
+
+def get_decomp_plan(
+    theta: BlockSparseTensor,
+    n_row_modes: int,
+    cache: Optional[DecompPlanCache] = None,
+) -> DecompositionPlan:
+    """Fetch (or build) the DecompositionPlan for this structural signature."""
+    return (cache or global_decomp_cache).get(theta, n_row_modes)

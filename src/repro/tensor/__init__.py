@@ -1,10 +1,16 @@
 """Block-sparse distributed tensor substrate (the Cyclops analogue in JAX)."""
 from .qn import Charge, IN, Index, OUT, fuse_sectors, make_index, qadd, qneg, qzero
-from .blocksparse import BlockSparseTensor, contract, contract_dense, svd_split
+from .blocksparse import (
+    BlockSparseTensor,
+    contract,
+    contract_dense,
+    svd_split,
+    svd_split_unplanned,
+)
 from .block_csr import contract_block_csr
 
 __all__ = [
     "Charge", "IN", "Index", "OUT", "fuse_sectors", "make_index", "qadd",
     "qneg", "qzero", "BlockSparseTensor", "contract", "contract_dense",
-    "svd_split", "contract_block_csr",
+    "svd_split", "svd_split_unplanned", "contract_block_csr",
 ]

@@ -59,7 +59,14 @@ def contract_block_csr(
     interpret: bool = False,
     use_kernel: bool = True,
 ) -> BlockSparseTensor:
-    """Contract via one batched block-sparse GEMM (sparse-sparse analogue)."""
+    """Contract via one batched block-sparse GEMM (sparse-sparse analogue).
+
+    Backend-equality guarantee: zero-padding is exact for GEMMs, so the
+    result equals the list algorithm (``contract``) block-for-block to
+    machine precision — the padded rows/columns multiply into zeros and the
+    unpadded region is sliced back out (asserted at <=1e-12 in
+    tests/test_dist.py and tests/test_kernels.py).
+    """
     ax_a, ax_b = tuple(axes[0]), tuple(axes[1])
     keep_a = [i for i in range(a.ndim) if i not in ax_a]
     keep_b = [i for i in range(b.ndim) if i not in ax_b]

@@ -253,6 +253,11 @@ def contract(
     remaining sector labels.  Under ``jit`` the Python loop unrolls into one
     XLA graph, so independent block GEMMs overlap (the TPU analogue of the
     paper's O(N_b) BSP supersteps collapsing into one program).
+
+    This is the reference algorithm every other backend (dense, csr,
+    batched, and the plan-executed engine paths) is tested against: all of
+    them must reproduce its output blocks to <=1e-12 on random charged
+    tensors and DMRG energies to <1e-10.
     """
     ax_a, ax_b = tuple(axes[0]), tuple(axes[1])
     assert len(ax_a) == len(ax_b)
@@ -319,12 +324,64 @@ def svd_split(
 ):
     """Blockwise truncated SVD across a bond (paper Fig. 1e, Sec. IV-A).
 
+    Planned front door: delegates to the shape-bucketed batched engine in
+    ``dist/decomp.py`` (one gather-assembled batched ``jnp.linalg.svd`` per
+    padded sector-shape bucket, one host sync per call).  The seed per-sector
+    loop remains available as ``svd_split_unplanned``; the planned path
+    matches it to <1e-10 up to the per-singular-vector sign gauge (products
+    U·V, singular values, retained sectors and ``trunc_err`` agree
+    unconditionally), except on *exact* singular-value ties at the truncation
+    threshold, where the planned path breaks ties deterministically by
+    (sector charge, position) and keeps the total bond ≤ ``max_bond`` while
+    the seed path keeps every tied value (and can exceed ``max_bond``).
+
+    Semantics (both paths): ``theta`` is matricized with the first
+    ``n_row_modes`` modes as rows, blocks are grouped by the fused row
+    charge, each charge sector is SVD'd, and truncation is *global* across
+    sectors — keep at most ``max_bond`` values, dropping those ``<= cutoff *
+    s_max`` (the comparison is strict ``>`` for keeping); at least one value
+    is always kept.  ``absorb`` multiplies the retained singular values into
+    U ("left") or V ("right"); any other string leaves both isometric
+    (singular values absorbed into neither).
+
+    Returns ``(U_tensor, V_tensor, svals_by_sector, trunc_err)`` with the
+    new bond index carrying one sector per retained charge and ``trunc_err``
+    the sum of squared discarded singular values (= the squared Frobenius
+    reconstruction error of the absorbed product U·V).  Must be called with
+    concrete (non-tracer) blocks: truncation syncs singular values to host.
+    """
+    from ..dist.decomp import svd_split_planned  # lazy: tensor -> dist only here
+
+    return svd_split_planned(
+        theta, n_row_modes, max_bond, cutoff=cutoff, absorb=absorb
+    )
+
+
+def svd_split_unplanned(
+    theta: BlockSparseTensor,
+    n_row_modes: int,
+    max_bond: int,
+    cutoff: float = 1e-12,
+    absorb: str = "right",
+):
+    """Seed blockwise truncated SVD: the per-sector loop, kept for A/B.
+
     Matricizes ``theta`` with the first ``n_row_modes`` modes as rows, groups
     blocks by the fused charge across the cut, SVDs each charge sector
-    independently, then truncates *globally* by singular value (keeping at
-    most ``max_bond`` and dropping values below ``cutoff * s_max``), exactly
+    independently (one dense assembly + one ``jnp.linalg.svd`` + one host
+    sync per sector), then truncates *globally* by singular value, exactly
     like the paper's list-format SVD ("grouped via similar quantum numbers
     along a row or column index, and decomposed").
+
+    Tie-break semantics this implementation actually has: the global
+    threshold is the ``n_keep``-th largest value with ``n_keep =
+    min(max_bond, #values > cutoff * s_max)``, and each sector keeps every
+    value ``>= thresh`` (capped at ``n_keep`` per sector) — so *exact* ties
+    at the threshold across sectors are all kept and the total retained bond
+    can exceed ``max_bond``; ``trunc_err`` is always the tail sum beyond the
+    top ``n_keep`` regardless.  ``absorb`` scales U ("left") or V ("right");
+    any other string scales neither.  See ``svd_split`` for the planned
+    batched path and its equality guarantee.
 
     Returns (U_tensor, V_tensor, svals_by_sector, trunc_err) with the
     singular values absorbed into U ("left") or V ("right") following the
