@@ -14,13 +14,18 @@ plans) and reports **compile/warmup and steady-state separately**:
 last ``TIMED`` sweeps, and jitted configs also record how many matvec
 retraces happened inside the timed window (0 == compile-once achieved).
 
-The run also splits each steady-state sweep into its two pipeline stages —
+The run also splits each steady-state sweep into its three pipeline stages —
 contraction+Davidson vs decomposition (``*_decomp_stage_s``, the summed
-``svd_split`` wall time per sweep) — and runs a dedicated decomposition
-microbench at m=64: the same converged pair tensors split by the seed
-per-sector loop (``svd_split_unplanned``) vs the planned batched engine
-(``dist/decomp.py``), asserting their products agree to <1e-10 and
-recording the stage speedup (``decomp_stage`` in the JSON).
+``svd_split`` wall time per sweep) vs environment updates
+(``*_env_stage_s``, the summed left/right env-update wall time per sweep) —
+and runs two dedicated stage microbenches: decomposition at m=64 (seed
+per-sector loop vs planned batched engine, ``decomp_stage`` in the JSON)
+and the environment stage at m=32 (``env_stage``): full left+right env
+rebuild passes over the converged state through the eager three-call
+``extend_left``/``extend_right`` path vs the fused jitted environment
+engine (``dist/envcore.py``), asserting block-for-block agreement to
+<1e-10 and zero retraces inside the timed window, and recording the stage
+speedup.
 
 Emits CSV rows (via benchmarks/run.py) and a JSON record at
 ``benchmarks/bench_dist.json`` so future PRs have a perf trajectory.  Must
@@ -110,6 +115,96 @@ def _bench_decomp_stage(fresh_engine, n, m64=64, warm_sweeps=3, reps=3):
     }
 
 
+def _bench_env_stage(fresh_engine, n, m=32, warm_sweeps=4, reps=5):
+    """Environment-stage microbench at m=32: eager three-call vs fused jit.
+
+    Converges a run at bond m, then times full environment rebuild passes —
+    a left-to-right pass of ``extend_left`` plus a right-to-left pass of
+    ``extend_right`` over every site — through (a) the seed-shaped eager
+    path (three chained plan-cached engine calls per site) and (b) the
+    fused jitted ``EnvironmentEngine`` on padded operands (one compiled
+    call per site).  Asserts the two paths agree block-for-block to <1e-10
+    and that the fused path triggers zero retraces inside the timed window,
+    blocking on every env block so async dispatch cannot hide device work.
+    """
+    import numpy as np
+
+    from repro.core.env import extend_left, extend_right, left_edge, right_edge
+    from repro.dist.envcore import EnvironmentEngine
+    from repro.dist.plan import EnvPlanCache
+
+    eng = fresh_engine(algo="list", jit_env=False)
+    for _ in range(warm_sweeps):
+        eng.sweep(max_bond=m)
+    T, W = eng.mps.tensors, eng.mpo
+    ceng = eng.contract_fn  # the warm plan-cached eager engine
+    fused = EnvironmentEngine(cache=EnvPlanCache())
+
+    def block(envs):
+        for t in envs:
+            for b in t.blocks.values():
+                b.block_until_ready()
+        return envs
+
+    def eager_pass():
+        envs = []
+        A = left_edge(T[0], W[0])
+        for j in range(n - 1):
+            A = extend_left(A, T[j], W[j], ceng)
+            envs.append(A)
+        B = right_edge(T[n - 1], W[n - 1])
+        for j in range(n - 1, 0, -1):
+            B = extend_right(B, T[j], W[j], ceng)
+            envs.append(B)
+        return block(envs)
+
+    def fused_pass():
+        envs = []
+        A = left_edge(T[0], W[0])
+        for j in range(n - 1):
+            A = fused.update_left(A, T[j], W[j])
+            envs.append(A)
+        B = right_edge(T[n - 1], W[n - 1])
+        for j in range(n - 1, 0, -1):
+            B = fused.update_right(B, T[j], W[j])
+            envs.append(B)
+        return block(envs)
+
+    ref = eager_pass()           # warm eager plans
+    got = fused_pass()           # build env plans + compile fused cores
+    max_diff = 0.0
+    for tr, tf in zip(ref, got):
+        assert set(tr.blocks) == set(tf.blocks)
+        for k in tr.blocks:
+            max_diff = max(max_diff, float(np.max(np.abs(
+                np.asarray(tr.blocks[k]) - np.asarray(tf.blocks[k])
+            ))))
+    assert max_diff < 1e-10, f"fused/eager env updates diverge: {max_diff}"
+
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        eager_pass()
+    eager_s = (time.perf_counter() - t0) / reps
+    rt0 = fused.jit_retraces
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fused_pass()
+    fused_s = (time.perf_counter() - t0) / reps
+    timed_retraces = fused.jit_retraces - rt0
+    assert timed_retraces == 0, f"env core retraced in timed window: {timed_retraces}"
+    return {
+        "max_bond": m,
+        "n_updates": 2 * (n - 1),
+        "reps": reps,
+        "eager_three_call_s": eager_s,
+        "fused_jit_s": fused_s,
+        "speedup": eager_s / max(fused_s, 1e-12),
+        "timed_retraces": timed_retraces,
+        "max_block_diff": max_diff,
+        "env_stats": fused.stats(),
+    }
+
+
 def _bench(n=16, m=32, quick=False):
     import jax
 
@@ -132,7 +227,8 @@ def _bench(n=16, m=32, quick=False):
 
     def timed_sweeps(eng, warm=WARM, timed=TIMED, bond=m):
         """(first_sweep_s, steady_sweep_s, energy, timed-window retraces,
-        steady decomposition-stage seconds per sweep)."""
+        steady decomposition-stage seconds per sweep, steady env-stage
+        seconds per sweep)."""
         t0 = time.perf_counter()
         eng.sweep(max_bond=bond)
         first = time.perf_counter() - t0
@@ -141,12 +237,14 @@ def _bench(n=16, m=32, quick=False):
         rt0 = getattr(eng.contract_fn, "jit_retraces", 0)
         t0 = time.perf_counter()
         svd_s = 0.0
+        env_s = 0.0
         for _ in range(timed):
             s = eng.sweep(max_bond=bond)
             svd_s += s.svd_seconds
+            env_s += s.env_seconds
         steady = (time.perf_counter() - t0) / timed
         rt1 = getattr(eng.contract_fn, "jit_retraces", 0)
-        return first, steady, float(s.energy), rt1 - rt0, svd_s / timed
+        return first, steady, float(s.energy), rt1 - rt0, svd_s / timed, env_s / timed
 
     rec = {
         "n_sites": n,
@@ -157,14 +255,21 @@ def _bench(n=16, m=32, quick=False):
         "quick": quick,
     }
 
+    # eager reference config: plan-cached engine, no jit anywhere — its env
+    # stage is the seed-shaped three-call extend path, the A/B baseline for
+    # the fused env numbers below
     cache = PlanCache()
-    eng = fresh_engine(engine=ContractionEngine(backend="list", cache=cache))
-    t1_plan, t_plan, e_plan, _, d_plan = timed_sweeps(eng)
+    eng = fresh_engine(
+        engine=ContractionEngine(backend="list", cache=cache), jit_env=False
+    )
+    t1_plan, t_plan, e_plan, _, d_plan, v_plan = timed_sweeps(eng)
     rec["planned_first_sweep_s"] = t1_plan
     rec["planned_sweep_s"] = t_plan
-    # stage split: decomposition (svd_split wall clock) vs everything else
+    # stage split: decomposition (svd_split wall clock) + environment
+    # (env-update wall clock) vs everything else (contraction + Davidson)
     rec["planned_decomp_stage_s"] = d_plan
-    rec["planned_contract_stage_s"] = t_plan - d_plan
+    rec["planned_env_stage_s"] = v_plan
+    rec["planned_contract_stage_s"] = t_plan - d_plan - v_plan
     rec["planned_decomp_stats"] = eng.contract_fn.stats()["decomp"]
     rec["plan_cache"] = cache.stats()
     rec["energy"] = e_plan
@@ -172,19 +277,25 @@ def _bench(n=16, m=32, quick=False):
     # tentpole config: shape-bucketed batched backend + compile-once
     # (bucket-padded) jitted matvec
     eng = fresh_engine(algo="batched", jit_matvec=True)
-    t1_b, t_b, e_b, rt_b, d_b = timed_sweeps(eng)
+    t1_b, t_b, e_b, rt_b, d_b, v_b = timed_sweeps(eng)
     rec["batched_first_sweep_s"] = t1_b
     rec["batched_sweep_s"] = t_b
     rec["batched_decomp_stage_s"] = d_b
-    rec["batched_contract_stage_s"] = t_b - d_b
+    rec["batched_env_stage_s"] = v_b
+    rec["batched_contract_stage_s"] = t_b - d_b - v_b
     rec["batched_timed_retraces"] = rt_b
     rec["batched_total_retraces"] = eng.contract_fn.jit_retraces
     rec["batched_svd_retraces"] = eng.contract_fn.decomp.jit_retraces
+    rec["batched_env_retraces"] = eng.contract_fn.env.jit_retraces
+    rec["batched_env_stats"] = eng.contract_fn.stats()["env"]
     rec["batched_speedup"] = t_plan / max(t_b, 1e-12)
     rec["batched_energy_diff"] = abs(e_b - e_plan)
+    # fused-vs-eager env stage inside full sweeps (the microbench below
+    # isolates the same comparison on identical tensors)
+    rec["env_stage_sweep_speedup"] = v_plan / max(v_b, 1e-12)
 
     eng = fresh_engine(algo="list", jit_matvec=True)
-    t1_jit, t_jit, e_jit, rt_jit, _ = timed_sweeps(eng)
+    t1_jit, t_jit, e_jit, rt_jit, _, _ = timed_sweeps(eng)
     rec["planned_jit_first_sweep_s"] = t1_jit
     rec["planned_jit_sweep_s"] = t_jit
     rec["planned_jit_timed_retraces"] = rt_jit
@@ -195,29 +306,30 @@ def _bench(n=16, m=32, quick=False):
     assert abs(e_jit - e_plan) < 1e-10, (e_jit, e_plan)
 
     rec["decomp_stage"] = _bench_decomp_stage(fresh_engine, n)
+    rec["env_stage"] = _bench_env_stage(fresh_engine, n, m)
 
     if not quick:
         # the seed per-call algorithm is ~20x the planned engine, so it is
         # sampled at sweep 2 (warm=1, timed=1) rather than swept to steady
         # state — the ratio is labeled with its protocol
-        t1_seed, t_seed, e_seed, _, _ = timed_sweeps(
+        t1_seed, t_seed, e_seed, _, _, _ = timed_sweeps(
             fresh_engine(algo="list_unplanned"), warm=1, timed=1
         )
         rec["seed_unplanned_sweep_s"] = t_seed
         rec["seed_unplanned_protocol"] = {"warm": 1, "timed": 1}
         # like-for-like ratio: planned engine sampled at the same sweep 2
-        _, t_plan2, e_plan2, _, _ = timed_sweeps(
-            fresh_engine(algo="list"), warm=1, timed=1
+        _, t_plan2, e_plan2, _, _, _ = timed_sweeps(
+            fresh_engine(algo="list", jit_env=False), warm=1, timed=1
         )
         rec["planned_sweep2_s"] = t_plan2
         rec["plan_speedup_sweep2"] = t_seed / max(t_plan2, 1e-12)
 
         eng = fresh_engine(algo="batched")
-        _, t_be, e_be, _, _ = timed_sweeps(eng)
+        _, t_be, e_be, _, _, _ = timed_sweeps(eng)
         rec["batched_eager_sweep_s"] = t_be
         rec["batched_eager_stats"] = eng.contract_fn.stats()["backend_seconds"]
 
-        _, t_auto, e_auto, _, _ = timed_sweeps(fresh_engine(algo="auto"))
+        _, t_auto, e_auto, _, _, _ = timed_sweeps(fresh_engine(algo="auto"))
         rec["auto_sweep_s"] = t_auto
 
         # sharded smoke on a reduced workload: on fake CPU devices the
@@ -322,6 +434,14 @@ def _run(quick=False, write_json=True):
             f"speedup_vs_seed={rec['decomp_stage']['speedup']:.2f}x;"
             f"seed_s={rec['decomp_stage']['seed_per_sector_s']:.3f};"
             f"product_diff={rec['decomp_stage']['max_product_diff']:.1e}",
+        ),
+        (
+            "dist_env_stage_m32",
+            rec["env_stage"]["fused_jit_s"] * 1e6,
+            f"speedup_vs_eager={rec['env_stage']['speedup']:.2f}x;"
+            f"eager_s={rec['env_stage']['eager_three_call_s']:.3f};"
+            f"timed_retraces={rec['env_stage']['timed_retraces']};"
+            f"block_diff={rec['env_stage']['max_block_diff']:.1e}",
         ),
         (
             "dist_planned_jit_sweep",

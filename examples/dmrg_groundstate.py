@@ -27,6 +27,10 @@ def main(argv=None):
                     default="list")
     ap.add_argument("--jit-matvec", action="store_true",
                     help="jit the planned two-site matvec")
+    ap.add_argument("--no-jit-env", action="store_true",
+                    help="disable the fused jitted env updates (engine "
+                         "algos default to them; bare algos always use the "
+                         "seed extend path)")
     ap.add_argument("--svd-method",
                     choices=["svd", "randomized", "auto", "unplanned"],
                     default=None,
@@ -73,7 +77,9 @@ def main(argv=None):
                    sweeps_per_bond=args.sweeps_per_bond,
                    davidson_iters=4, algo=args.algo, verbose=True,
                    jit_matvec=args.jit_matvec, shard_policy=shard_policy,
-                   svd_method=args.svd_method)
+                   svd_method=args.svd_method,
+                   jit_env=False if args.no_jit_env
+                   or args.algo.endswith("_unplanned") else None)
     print(f"\nground-state energy estimate: {res.energy:.10f}")
     print(f"energy per site:              {res.energy / n:.10f}")
 

@@ -45,6 +45,7 @@ def run_dmrg(
     pad_matvec: Optional[bool] = None,
     shard_policy: Optional[BlockShardPolicy] = None,
     svd_method: Optional[str] = None,
+    jit_env: Optional[bool] = None,
 ) -> DMRGResult:
     mpo = build_mpo(space, terms, n_sites, dtype=dtype)
     if mpo_cutoff is not None:
@@ -60,6 +61,7 @@ def run_dmrg(
         pad_matvec=pad_matvec,
         shard_policy=shard_policy,
         svd_method=svd_method,
+        jit_env=jit_env,
     )
 
     stats: List[SweepStats] = []

@@ -12,6 +12,12 @@ choice).  All of them now execute through the plan-cached
 ``dist.ContractionEngine``; ``get_contractor`` is kept as a thin compat shim
 over it.  The ``*_unplanned`` names expose the seed per-call algorithms for
 A/B benchmarking.
+
+``extend_left`` / ``extend_right`` here are the seed environment updates —
+three chained ``contract_fn`` calls — kept verbatim as the bare-contract
+fallback and the reference the fused environment engine
+(``dist/envcore.py``, ``jit_env`` in ``core/sweep.py``) is tested against
+block-for-block.
 """
 from __future__ import annotations
 
@@ -31,7 +37,8 @@ def get_contractor(algo: str) -> Callable:
     The returned object is callable as ``fn(a, b, axes)`` exactly like the
     bare contraction functions it replaces; sweep code that wants the engine
     extras (jitted matvec, sharding policy, the planned ``svd_split``
-    decomposition stage, stats) can use them when present.  Engine-backed
+    decomposition stage, the fused ``env_update_left/right`` environment
+    stage, stats) can use them when present.  Engine-backed
     names carry the <1e-10 seed-equality guarantee of ``dist.engine``; the
     ``*_unplanned`` names ARE the seed algorithms.
     """

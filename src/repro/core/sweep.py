@@ -17,6 +17,15 @@ loop with ``svd_method="unplanned"``, or the randomized path
 ("randomized"/"auto") — so ``_optimize_pair`` stays in device-land from the
 matvec through the split, with one host sync per split for truncation.
 ``SweepStats.svd_seconds`` reports the stage's wall-clock per sweep.
+
+The environment stage is the fourth and final pipeline stage under the
+engine (``jit_env``, defaulting on for engines): each left/right env update
+runs as ONE fused jitted call (``dist/envcore.py``) on power-of-two-padded
+operands instead of three chained eager contractions, and ``_init_envs``
+rebuilds the right environments as one planned right-to-left pass.
+``jit_env=False`` (or a bare contractor) falls back to the seed
+``extend_left`` / ``extend_right``; ``SweepStats.env_seconds`` carries the
+stage's wall-clock per sweep.
 """
 from __future__ import annotations
 
@@ -59,6 +68,11 @@ class SweepStats:
     # reflects real SVD compute; the remainder of ``seconds`` is
     # contraction + Davidson + environment work.
     svd_seconds: float = 0.0
+    # wall-clock of the environment stage (all left/right env updates) this
+    # sweep, in seconds — fused jitted updates when ``jit_env`` is on, the
+    # seed three-contraction path otherwise.  Host-side dispatch time (jax
+    # is async), like the contraction engine's ``backend_seconds``.
+    env_seconds: float = 0.0
 
 
 class DMRGEngine:
@@ -76,6 +90,7 @@ class DMRGEngine:
         shard_policy: Optional[BlockShardPolicy] = None,
         engine: Optional[Callable] = None,
         svd_method: Optional[str] = None,
+        jit_env: Optional[bool] = None,
     ):
         assert mps.n_sites == len(mpo)
         self.mps = mps
@@ -104,6 +119,10 @@ class DMRGEngine:
                 else "svd"
             )
             self.contract_fn.policy = shard_policy
+            # environment stage: fused plan-cached jitted updates
+            # (dist/envcore.py) by default for engines; jit_env=False keeps
+            # the seed extend_left/extend_right three-call path
+            self.jit_env = True if jit_env is None else bool(jit_env)
         else:
             # bare contractors (the *_unplanned algos, or a plain callable
             # passed via engine=) have no gather step (sharded blocks would
@@ -130,7 +149,14 @@ class DMRGEngine:
                     f"backend, not {backend}; bare contractors use the seed "
                     f"svd_split_unplanned"
                 )
+            if jit_env:
+                raise ValueError(
+                    f"jit_env requires a ContractionEngine backend, "
+                    f"not {backend}; bare contractors use the seed "
+                    f"extend_left/extend_right"
+                )
             self.svd_planned = False
+            self.jit_env = False
         if shard_policy is not None:
             self.mps.tensors = shard_policy.place_mps(self.mps.tensors)
             self.mpo = shard_policy.place_mps(self.mpo)
@@ -147,11 +173,33 @@ class DMRGEngine:
         self.right_envs: List[Optional[BlockSparseTensor]] = [None] * (n + 1)
         self.left_envs[0] = left_edge(T[0], W[0])
         self.right_envs[n - 1] = right_edge(T[n - 1], W[n - 1])
-        # build right envs down to site 1 (first pair needs right_envs[1])
+        # build right envs down to site 1 (first pair needs right_envs[1]) —
+        # one planned right-to-left pass: fused jitted updates when jit_env
         for j in range(n - 2, 0, -1):
-            self.right_envs[j] = self._place(extend_right(
-                self.right_envs[j + 1], T[j + 1], W[j + 1], self.contract_fn
-            ))
+            self.right_envs[j] = self._place(self._extend_right_env(j))
+
+    def _extend_left_env(self, j: int) -> BlockSparseTensor:
+        """A_{j+1} from A_j: absorb site j into the left environment.
+
+        Planned fused jitted update (``engine.env_update_left``) when
+        ``jit_env`` is on; the seed three-contraction ``extend_left``
+        otherwise (and always for bare contractors).
+        """
+        A, T, W = self.left_envs[j], self.mps.tensors[j], self.mpo[j]
+        if self.jit_env:
+            return self.contract_fn.env_update_left(
+                A, T, W, mpo_padded=self._padded_mpo(j)
+            )
+        return extend_left(A, T, W, self.contract_fn)
+
+    def _extend_right_env(self, j: int) -> BlockSparseTensor:
+        """B_j from B_{j+1}: absorb site j+1 into the right environment."""
+        B, T, W = self.right_envs[j + 1], self.mps.tensors[j + 1], self.mpo[j + 1]
+        if self.jit_env:
+            return self.contract_fn.env_update_right(
+                B, T, W, mpo_padded=self._padded_mpo(j + 1)
+            )
+        return extend_right(B, T, W, self.contract_fn)
 
     def _padded_mpo(self, j: int) -> BlockSparseTensor:
         if self._mpo_padded[j] is None:
@@ -219,14 +267,15 @@ class DMRGEngine:
         energies, site_secs = [], []
         max_err = 0.0
         svd_secs = 0.0
+        env_secs = 0.0
         t0 = time.perf_counter()
 
         for j in range(n - 1):  # left -> right
             ts = time.perf_counter()
             lam, err, svd_dt = self._optimize_pair(j, max_bond, cutoff, absorb="right")
-            self.left_envs[j + 1] = self._place(extend_left(
-                self.left_envs[j], T[j], W[j], self.contract_fn
-            ))
+            te = time.perf_counter()
+            self.left_envs[j + 1] = self._place(self._extend_left_env(j))
+            env_secs += time.perf_counter() - te
             energies.append(lam)
             site_secs.append(time.perf_counter() - ts)
             max_err = max(max_err, err)
@@ -235,9 +284,9 @@ class DMRGEngine:
         for j in range(n - 2, -1, -1):  # right -> left
             ts = time.perf_counter()
             lam, err, svd_dt = self._optimize_pair(j, max_bond, cutoff, absorb="left")
-            self.right_envs[j] = self._place(extend_right(
-                self.right_envs[j + 1], T[j + 1], W[j + 1], self.contract_fn
-            ))
+            te = time.perf_counter()
+            self.right_envs[j] = self._place(self._extend_right_env(j))
+            env_secs += time.perf_counter() - te
             energies.append(lam)
             site_secs.append(time.perf_counter() - ts)
             max_err = max(max_err, err)
@@ -251,4 +300,5 @@ class DMRGEngine:
             site_seconds=site_secs,
             site_energies=energies,
             svd_seconds=svd_secs,
+            env_seconds=env_secs,
         )

@@ -18,10 +18,16 @@ execution:
               as one batched ``jnp.linalg.svd`` per padded shape bucket,
               with a single host sync for the global truncation and an
               optional randomized-SVD path.
+- ``envcore``: ``EnvironmentEngine`` — the left/right environment updates
+              (and the startup right-to-left rebuild) executed as ONE fused
+              jitted core per padded structure: the three chained
+              contractions of ``extend_left``/``extend_right`` with no host
+              round-trips between them.
 - ``engine``: ``ContractionEngine`` — executes plans through a pluggable
               list / dense / csr / batched backend chosen by a
               flop-and-dispatch cost model, jits the planned two-site
-              matvec, and fronts the decomposition engine (``svd_split``).
+              matvec, and fronts the decomposition engine (``svd_split``)
+              and the environment engine (``env_update_left/right``).
 
 All execution paths compute the same physics: every backend and the planned
 SVD agree with the seed algorithms to <1e-10 (tests/test_dist.py,
@@ -30,14 +36,19 @@ tests/test_batch.py, tests/test_decomp.py).
 from .batch import pad_block_sparse, unpad_block_sparse
 from .decomp import DecompositionEngine, svd_split_planned
 from .engine import ContractionEngine
+from .envcore import EnvironmentEngine
 from .plan import (
     ContractionPlan,
     DecompPlanCache,
     DecompositionPlan,
+    EnvPlanCache,
+    EnvironmentPlan,
     PlanCache,
     get_decomp_plan,
+    get_env_plan,
     get_plan,
     global_decomp_cache,
+    global_env_cache,
     global_plan_cache,
 )
 from .shard import BlockShardPolicy, make_block_mesh
@@ -48,11 +59,16 @@ __all__ = [
     "DecompositionEngine",
     "DecompositionPlan",
     "DecompPlanCache",
+    "EnvironmentEngine",
+    "EnvironmentPlan",
+    "EnvPlanCache",
     "PlanCache",
     "get_plan",
     "get_decomp_plan",
+    "get_env_plan",
     "global_plan_cache",
     "global_decomp_cache",
+    "global_env_cache",
     "svd_split_planned",
     "BlockShardPolicy",
     "make_block_mesh",

@@ -46,6 +46,25 @@ def is_tracing(t: BlockSparseTensor) -> bool:
     return any(isinstance(b, jax.core.Tracer) for b in t.blocks.values())
 
 
+def execute_pairs(
+    plan: ContractionPlan, a_blocks: Dict, b_blocks: Dict
+) -> Dict:
+    """Execute a plan's pair table as one tensordot per pair, into a dict.
+
+    The list algorithm's numeric half, shared by the engine's "list"
+    backend and the fused env core (``dist/envcore.py``) so the
+    accumulation order — the basis of the <1e-10 seed-equality guarantee
+    both advertise — cannot diverge between them.  Under jit the loop
+    unrolls into the enclosing XLA program.
+    """
+    ax = (plan.ax_a, plan.ax_b)
+    out: Dict = {}
+    for ka, kb, kc in plan.pairs:
+        piece = jnp.tensordot(a_blocks[ka], b_blocks[kb], axes=ax)
+        out[kc] = out[kc] + piece if kc in out else piece
+    return out
+
+
 def matricize_lhs(
     t: BlockSparseTensor, keep: Tuple[int, ...], ax: Tuple[int, ...]
 ) -> BlockMats:

@@ -38,12 +38,14 @@ from ..tensor.block_csr import pack_blocks
 from ..tensor.blocksparse import BlockKey, BlockSparseTensor
 from .batch import (
     execute_batched,
+    execute_pairs,
     is_tracing as _is_tracing,
     matricize_lhs,
     matricize_rhs,
     memo_dev_idx,
 )
 from .decomp import DecompositionEngine
+from .envcore import EnvironmentEngine
 from .plan import Axes, ContractionPlan, PlanCache, global_plan_cache
 from .shard import BlockShardPolicy
 
@@ -77,6 +79,7 @@ class ContractionEngine:
         allow_csr: bool = False,
         pair_overhead: float = PAIR_OVERHEAD_FLOPS,
         decomp: Optional[DecompositionEngine] = None,
+        env: Optional[EnvironmentEngine] = None,
     ):
         assert backend in ("auto", "list", "dense", "csr", "batched")
         self.backend = backend
@@ -89,6 +92,9 @@ class ContractionEngine:
         # decomposition stage (dist/decomp.py): per-engine so stats() reports
         # this run's SVD counters, sharing the global DecompPlanCache
         self.decomp = decomp if decomp is not None else DecompositionEngine()
+        # environment stage (dist/envcore.py): per-engine for the same
+        # reason, sharing the global EnvPlanCache and its compiled cores
+        self.env = env if env is not None else EnvironmentEngine()
         zero = {"list": 0, "dense": 0, "csr": 0, "batched": 0}
         self.backend_counts: Dict[str, int] = dict(zero)
         self.backend_flops: Dict[str, float] = {k: 0.0 for k in zero}
@@ -166,14 +172,7 @@ class ContractionEngine:
     def _execute_list(
         self, plan: ContractionPlan, a: BlockSparseTensor, b: BlockSparseTensor
     ) -> BlockSparseTensor:
-        ax = (plan.ax_a, plan.ax_b)
-        out_blocks: Dict[BlockKey, jax.Array] = {}
-        for ka, kb, kc in plan.pairs:
-            piece = jnp.tensordot(a.blocks[ka], b.blocks[kb], axes=ax)
-            if kc in out_blocks:
-                out_blocks[kc] = out_blocks[kc] + piece
-            else:
-                out_blocks[kc] = piece
+        out_blocks = execute_pairs(plan, a.blocks, b.blocks)
         return BlockSparseTensor(plan.out_indices, out_blocks, plan.out_charge)
 
     def _execute_dense(
@@ -337,6 +336,62 @@ class ContractionEngine:
             U, V = self.policy.place(U), self.policy.place(V)
         return U, V, svals, err
 
+    # --------------------------------------------------------------- env API
+    def env_update_left(
+        self,
+        A: BlockSparseTensor,
+        T: BlockSparseTensor,
+        W: BlockSparseTensor,
+        *,
+        mpo_padded: Optional[BlockSparseTensor] = None,
+    ) -> BlockSparseTensor:
+        """Planned fused left env update through the environment engine.
+
+        Same result as the seed ``core.env.extend_left(A, T, W)`` to <1e-10
+        block-for-block (``dist.envcore``), executed as one compiled call;
+        sharded inputs are gathered to replicated form first under a
+        storage-mode policy, and the output is placed under an spmd policy,
+        like contraction results.
+        """
+        return self._env_update("left", A, T, W, mpo_padded)
+
+    def env_update_right(
+        self,
+        B: BlockSparseTensor,
+        T: BlockSparseTensor,
+        W: BlockSparseTensor,
+        *,
+        mpo_padded: Optional[BlockSparseTensor] = None,
+    ) -> BlockSparseTensor:
+        """Planned fused right env update; see ``env_update_left``."""
+        return self._env_update("right", B, T, W, mpo_padded)
+
+    def _env_update(self, side, env, T, W, mpo_padded):
+        if (
+            self.policy is not None
+            and self.policy.storage_only
+            and not (_is_tracing(env) or _is_tracing(T))
+        ):
+            env, T, W = (
+                self.policy.replicated(env),
+                self.policy.replicated(T),
+                self.policy.replicated(W),
+            )
+            if mpo_padded is not None:
+                # keep the caller's per-site padded-MPO cache: gathering the
+                # padded form is cheaper than re-padding the gathered W on
+                # every one of the 2(n-1) updates per sweep
+                mpo_padded = self.policy.replicated(mpo_padded)
+        fn = self.env.update_left if side == "left" else self.env.update_right
+        out = fn(env, T, W, mpo_padded=mpo_padded)
+        if (
+            self.policy is not None
+            and not self.policy.storage_only
+            and not _is_tracing(out)
+        ):
+            out = self.policy.place(out)
+        return out
+
     # ------------------------------------------------------------- reporting
     def stats(self) -> Dict:
         """Plan-cache, backend-dispatch, flop, wall-time and retrace counters.
@@ -350,9 +405,11 @@ class ContractionEngine:
         ``jit_retraces`` counts how many times the jitted matvec was
         (re)traced — the compile-time side of the ledger, vs steady-state
         replays.  ``decomp`` is the decomposition-stage sub-ledger (SVD
-        calls/flops/seconds/retraces; see ``DecompositionEngine.stats``) —
-        together with the contraction counters it gives the per-stage split
-        that ``benchmarks/bench_dist.py`` reports.
+        calls/flops/seconds/retraces; see ``DecompositionEngine.stats``) and
+        ``env`` the environment-stage one (fused update count/flops/wall/
+        retraces; see ``EnvironmentEngine.stats``) — together with the
+        contraction counters they give the per-stage split that
+        ``benchmarks/bench_dist.py`` reports.
         """
         return {
             "plan_cache": self.cache.stats(),
@@ -361,4 +418,5 @@ class ContractionEngine:
             "backend_seconds": dict(self.backend_seconds),
             "jit_retraces": self.jit_retraces,
             "decomp": self.decomp.stats(),
+            "env": self.env.stats(),
         }

@@ -16,6 +16,13 @@ the gather tables that assemble each padded sector-matrix stack, cached in
 a ``DecompPlanCache`` by the analogous ``decomp_signature``; execution lives
 in ``dist/decomp.py``.
 
+And to the environment stage (paper Fig. 1d, Sec. II-C): an
+``EnvironmentPlan`` chains the three per-site contraction plans of
+``extend_left`` / ``extend_right`` into one resolved pipeline — every
+intermediate block structure precomputed — cached in an ``EnvPlanCache`` by
+the composite ``env_signature`` of the (env, site, MPO) triple; execution
+lives in ``dist/envcore.py``.
+
 Plans hold only Python/numpy metadata — no jax arrays — so building them
 never touches a device and they are safe to share across jit traces (block
 keys and Index metadata are concrete even under tracing).
@@ -645,6 +652,138 @@ class DecompositionPlan:
         return len(self.buckets)
 
 
+# ------------------------------------------------------------- environments
+def env_signature(
+    env: BlockSparseTensor,
+    site: BlockSparseTensor,
+    mpo: BlockSparseTensor,
+    side: str,
+) -> PlanSignature:
+    """Composite structural signature of one environment update.
+
+    The fused left/right env update (``dist/envcore.py``) is a pure function
+    of the (env, site, MPO) triple's structure plus the sweep direction —
+    the same structural-signature contract as ``plan_signature`` /
+    ``decomp_signature``, extended to a three-tensor pipeline.
+    """
+    return (
+        "env",
+        side,
+        env.indices,
+        env.charge,
+        tuple(sorted(env.blocks)),
+        site.indices,
+        site.charge,
+        tuple(sorted(site.blocks)),
+        mpo.indices,
+        mpo.charge,
+        tuple(sorted(mpo.blocks)),
+    )
+
+
+def _probe(
+    indices: Tuple[Index, ...], charge: Charge, keys
+) -> BlockSparseTensor:
+    """Structure-only tensor (blocks map to None): plan building and
+    signatures read block *keys* only, never block values."""
+    return BlockSparseTensor(indices, dict.fromkeys(keys), charge)
+
+
+def _conj_probe(t: BlockSparseTensor) -> BlockSparseTensor:
+    """Structural image of ``t.conj()``: dual indices, negated charge,
+    same block keys (conj never moves blocks)."""
+    return _probe(
+        tuple(ix.dual() for ix in t.indices),
+        qscale(t.charge, -1),
+        t.blocks,
+    )
+
+
+# the three chained contractions of extend_left / extend_right
+# (core/env.py), as static axes per step, plus the final transpose
+_ENV_LEFT_AXES = (((2,), (0,)), ((1, 2), (0, 2)), ((0, 1), (0, 2)))
+_ENV_LEFT_PERM = (0, 2, 1)
+_ENV_RIGHT_AXES = (((2,), (2,)), ((3, 1), (3, 2)), ((1, 3), (2, 1)))
+_ENV_RIGHT_PERM = (2, 1, 0)
+
+
+@dataclasses.dataclass
+class EnvironmentPlan:
+    """Precomputed symbolic structure of one fused env update.
+
+    Chains the three per-site ``ContractionPlan``s of ``extend_left`` /
+    ``extend_right`` (fetched through the shared contraction ``PlanCache``,
+    so the eager three-call path and the fused core reuse the same step
+    plans) plus the final transpose, resolving every intermediate block
+    structure ahead of time.  Holds only Python/numpy metadata; executed by
+    ``dist.envcore.EnvironmentEngine`` as ONE jitted core per structure.
+    """
+
+    signature: PlanSignature
+    side: str                             # "left" | "right"
+    steps: Tuple[ContractionPlan, ContractionPlan, ContractionPlan]
+    perm: Tuple[int, ...]                 # final transpose of step-3 output
+    env_keys: Tuple[BlockKey, ...]        # sorted operand keys, core arg order
+    site_keys: Tuple[BlockKey, ...]
+    mpo_keys: Tuple[BlockKey, ...]
+    out_indices: Tuple[Index, ...]        # post-transpose env structure
+    out_charge: Charge
+    out_keys: Tuple[BlockKey, ...]        # post-transpose, sorted
+    pre_out_keys: Tuple[BlockKey, ...]    # step-3 key per out_keys entry
+    flops: float                          # sum over steps of flops_list
+    # compiled fused cores keyed by the executing engine's jit flag; stored
+    # on the plan (like DecompositionPlan._exec) so engines sharing the
+    # cache also share compiles
+    _exec: Dict = dataclasses.field(default_factory=dict)
+
+    # ------------------------------------------------------------------ build
+    @staticmethod
+    def build(
+        env: BlockSparseTensor,
+        site: BlockSparseTensor,
+        mpo: BlockSparseTensor,
+        side: str,
+        cache: Optional["PlanCache"] = None,
+    ) -> "EnvironmentPlan":
+        assert side in ("left", "right")
+        cache = cache if cache is not None else global_plan_cache
+        bra = _conj_probe(site)
+        if side == "left":
+            ax1, ax2, ax3 = _ENV_LEFT_AXES
+            perm = _ENV_LEFT_PERM
+            p1 = cache.get(env, site, ax1)
+            t1 = _probe(p1.out_indices, p1.out_charge, p1.out_keys)
+            p2 = cache.get(t1, mpo, ax2)
+            t2 = _probe(p2.out_indices, p2.out_charge, p2.out_keys)
+            p3 = cache.get(bra, t2, ax3)
+        else:
+            ax1, ax2, ax3 = _ENV_RIGHT_AXES
+            perm = _ENV_RIGHT_PERM
+            p1 = cache.get(site, env, ax1)
+            t1 = _probe(p1.out_indices, p1.out_charge, p1.out_keys)
+            p2 = cache.get(t1, mpo, ax2)
+            t2 = _probe(p2.out_indices, p2.out_charge, p2.out_keys)
+            p3 = cache.get(t2, bra, ax3)
+        post_to_pre = {
+            tuple(k[p] for p in perm): k for k in p3.out_keys
+        }
+        out_keys = tuple(sorted(post_to_pre))
+        return EnvironmentPlan(
+            signature=env_signature(env, site, mpo, side),
+            side=side,
+            steps=(p1, p2, p3),
+            perm=perm,
+            env_keys=tuple(sorted(env.blocks)),
+            site_keys=tuple(sorted(site.blocks)),
+            mpo_keys=tuple(sorted(mpo.blocks)),
+            out_indices=tuple(p3.out_indices[p] for p in perm),
+            out_charge=p3.out_charge,
+            out_keys=out_keys,
+            pre_out_keys=tuple(post_to_pre[k] for k in out_keys),
+            flops=p1.flops_list + p2.flops_list + p3.flops_list,
+        )
+
+
 # ------------------------------------------------------------------- caches
 class _SignatureLRU:
     """LRU cache of plans keyed by structural signature.
@@ -703,8 +842,39 @@ class DecompPlanCache(_SignatureLRU):
         return self._get(sig, lambda: DecompositionPlan.build(theta, n_row_modes))
 
 
+class EnvPlanCache(_SignatureLRU):
+    """LRU cache of EnvironmentPlans keyed by composite triple signature.
+
+    ``contraction_cache`` is where the three chained step plans are fetched
+    from (the global contraction cache by default, so the eager three-call
+    path and the fused core share step plans).
+    """
+
+    def __init__(
+        self, maxsize: int = 4096, contraction_cache: Optional[PlanCache] = None
+    ):
+        super().__init__(maxsize)
+        self.contraction_cache = contraction_cache
+
+    def get(
+        self,
+        env: BlockSparseTensor,
+        site: BlockSparseTensor,
+        mpo: BlockSparseTensor,
+        side: str,
+    ) -> EnvironmentPlan:
+        sig = env_signature(env, site, mpo, side)
+        return self._get(
+            sig,
+            lambda: EnvironmentPlan.build(
+                env, site, mpo, side, cache=self.contraction_cache
+            ),
+        )
+
+
 global_plan_cache = PlanCache()
 global_decomp_cache = DecompPlanCache()
+global_env_cache = EnvPlanCache()
 
 
 def get_plan(
@@ -724,3 +894,14 @@ def get_decomp_plan(
 ) -> DecompositionPlan:
     """Fetch (or build) the DecompositionPlan for this structural signature."""
     return (cache or global_decomp_cache).get(theta, n_row_modes)
+
+
+def get_env_plan(
+    env: BlockSparseTensor,
+    site: BlockSparseTensor,
+    mpo: BlockSparseTensor,
+    side: str,
+    cache: Optional[EnvPlanCache] = None,
+) -> EnvironmentPlan:
+    """Fetch (or build) the EnvironmentPlan for this triple's signature."""
+    return (cache or global_env_cache).get(env, site, mpo, side)

@@ -1,8 +1,14 @@
 import os
 import sys
 
+import pytest
+
 # 64-bit for DMRG numerics; LM-model code passes explicit float32/bfloat16
-# dtypes, so this does not change the transformer stack's behavior.
+# dtypes, so this does not change the transformer stack's behavior.  CI also
+# runs a float32 leg (JAX_ENABLE_X64=0 in the job env wins over this
+# setdefault); tests whose tolerances genuinely need float64 carry the
+# ``x64`` marker and are skipped there, so the f32 leg still exercises the
+# whole precision-agnostic surface (dtype handling, plan caches, kernels).
 os.environ.setdefault("JAX_ENABLE_X64", "1")
 # NOTE: deliberately NOT setting --xla_force_host_platform_device_count here:
 # smoke tests and benches must see the single real CPU device; only
@@ -20,3 +26,24 @@ except ModuleNotFoundError:
     from _hypothesis_stub import install as _install_hypothesis_stub
 
     _install_hypothesis_stub()
+
+
+def pytest_collection_modifyitems(config, items):
+    """Skip ``x64``-marked tests when jax runs in float32.
+
+    The marker tags tests whose assertions are only meaningful at float64
+    precision (1e-10 energy/block equality, ED comparisons, SVD round
+    trips).  Asking jax itself (rather than re-parsing the env var, whose
+    truthiness rules jax owns — e.g. "off" and "no" also disable x64)
+    guarantees the skip decision matches the precision the suite runs with.
+    """
+    import jax
+
+    if jax.config.jax_enable_x64:
+        return
+    skip = pytest.mark.skip(
+        reason="needs float64 numerics (JAX_ENABLE_X64=1); f32 CI leg skips"
+    )
+    for item in items:
+        if "x64" in item.keywords:
+            item.add_marker(skip)

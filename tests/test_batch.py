@@ -135,6 +135,7 @@ class TestCompileOnceMatvec:
         terms = heisenberg_j1j2_terms(3, 2, 1.0, 0.5, cylinder=False)
         return sp, terms
 
+    @pytest.mark.x64
     def test_batched_energy_equals_seed(self):
         sp, terms = self._system()
         kw = dict(bond_schedule=(8, 16), sweeps_per_bond=2, davidson_iters=6)
@@ -142,6 +143,7 @@ class TestCompileOnceMatvec:
         batched = run_dmrg(sp, terms, 6, algo="batched", **kw)
         assert abs(seed.energy - batched.energy) < 1e-10
 
+    @pytest.mark.x64
     def test_batched_jit_pad_energy_equals_seed(self):
         sp, terms = self._system()
         kw = dict(bond_schedule=(8,), sweeps_per_bond=2, davidson_iters=4)
@@ -244,6 +246,7 @@ class TestPackPairsZeroFill:
 
 
 class TestBatchedSubspaceDavidson:
+    @pytest.mark.x64
     def test_matches_dense_eigensolver(self):
         """Gram-identity residual + fused column fetch reproduce the seed
         Davidson behavior: converges to the exact smallest eigenvalue."""

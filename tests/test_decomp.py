@@ -147,6 +147,7 @@ class TestDecompPlan:
             assert b.rp >= sec.R and b.cp >= sec.C
 
 
+@pytest.mark.x64
 class TestPlannedEqualsUnplanned:
     @settings(max_examples=15, deadline=None)
     @given(seed=st.integers(0, 10_000), max_bond=st.integers(1, 12))
@@ -265,6 +266,7 @@ class TestRandomizedPath:
         col = Index((((0,), C),), OUT)
         return BlockSparseTensor([row, col], {(0, 0): jnp.asarray(dense)})
 
+    @pytest.mark.x64
     def test_randomized_matches_exact_top_of_spectrum(self):
         theta = self._decaying_theta()
         exact = DecompositionEngine(cache=DecompPlanCache(), method="svd")
@@ -336,6 +338,7 @@ class TestEngineIntegration:
         with pytest.raises(TypeError, match="concrete"):
             jax.jit(f)(theta)
 
+    @pytest.mark.x64
     def test_dmrg_planned_svd_energy_equals_full_seed(self):
         sp = spin_half_space()
         terms = heisenberg_j1j2_terms(3, 2, 1.0, 0.5, cylinder=False)

@@ -139,6 +139,7 @@ class TestPlanExecutionEquivalence:
                 np.asarray(got.blocks[k]), np.asarray(ref.blocks[k]), atol=1e-12
             )
 
+    @pytest.mark.x64
     def test_higher_order_all_backends(self):
         rng = np.random.default_rng(7)
         i1, i2, i3 = (rand_index(rng) for _ in range(3))
@@ -184,6 +185,7 @@ class TestEngineDMRG:
         terms = heisenberg_j1j2_terms(3, 2, 1.0, 0.5, cylinder=False)
         return sp, terms
 
+    @pytest.mark.x64
     def test_planned_energy_equals_seed_list(self):
         sp, terms = self._system()
         kw = dict(bond_schedule=(8, 16), sweeps_per_bond=2, davidson_iters=6)
@@ -193,6 +195,7 @@ class TestEngineDMRG:
         for s_seed, s_plan in zip(seed.sweep_stats, planned.sweep_stats):
             assert abs(s_seed.energy - s_plan.energy) < 1e-10
 
+    @pytest.mark.x64
     def test_jit_matvec_energy_equals_seed(self):
         sp, terms = self._system()
         kw = dict(bond_schedule=(8,), sweeps_per_bond=2, davidson_iters=4)
@@ -200,6 +203,7 @@ class TestEngineDMRG:
         jit = run_dmrg(sp, terms, 6, algo="list", jit_matvec=True, **kw)
         assert abs(seed.energy - jit.energy) < 1e-10
 
+    @pytest.mark.x64
     def test_auto_backend_energy_equals_seed(self):
         sp, terms = self._system()
         kw = dict(bond_schedule=(8,), sweeps_per_bond=2, davidson_iters=4)

@@ -48,6 +48,7 @@ class TestMPO:
         idx = int("".join(str(s) for s in states), 2)
         assert abs(e_mpo - H[idx, idx]) < 1e-12
 
+    @pytest.mark.x64
     def test_compression_preserves_expectation(self):
         el = electron_space()
         terms = triangular_hubbard_terms(3, 2, 1.0, 8.5, cylinder=False)
@@ -60,6 +61,7 @@ class TestMPO:
         assert abs(e1 - e2) < 1e-9
 
 
+@pytest.mark.x64
 class TestDMRGvsED:
     def test_spins_2x3(self):
         sp = spin_half_space()

@@ -9,6 +9,10 @@ from repro.core.models import heisenberg_j1j2_terms
 from repro.core.siteops import spin_half_space
 
 
+# DMRG-vs-ED observable comparisons: float64-only tolerances
+pytestmark = pytest.mark.x64
+
+
 @pytest.fixture(scope="module")
 def ground_state():
     sp = spin_half_space()

@@ -79,6 +79,7 @@ class TestAlgorithmEquivalence:
         C3 = contract_block_csr(A, B, axes=((1,), (0,)), interpret=True).to_dense()
         np.testing.assert_allclose(np.asarray(C1), np.asarray(C3), atol=1e-10)
 
+    @pytest.mark.x64
     def test_higher_order(self):
         rng = np.random.default_rng(7)
         i1, i2, i3 = (rand_index(rng) for _ in range(3))
@@ -94,6 +95,7 @@ class TestAlgorithmEquivalence:
         np.testing.assert_allclose(np.asarray(C1), np.asarray(C3), atol=1e-10)
 
 
+@pytest.mark.x64
 class TestSVD:
     def _theta(self, seed=3):
         for s in range(seed, seed + 50):  # ensure a non-empty block structure
