@@ -1,0 +1,217 @@
+"""Serving throughput benchmark: problems/sec at batch sizes {1, 8, 64}.
+
+The serving subsystem's claim is that a parameter sweep batches through ONE
+compiled pipeline with a leading problem axis, so throughput (problems/sec)
+grows far faster than linearly in compute cost as the batch widens — the
+per-block GEMMs at smoke scale are tiny, and vmapping B problems into one
+dispatch amortizes the Python/dispatch overhead that dominates them.
+
+Workload: heisenberg chain, n=8, bond schedule (8, 16), 2 sweeps per bond,
+6 Davidson iterations — the smoke config of the acceptance gate.  For each
+batch size B the J coupling sweeps linspace(0.8, 1.2, B); one untimed solve
+warms every trace, then ``REPS`` timed solves through the shared
+``StackedOps`` must run with ZERO retraces.  Batch-8 energies are checked
+against 8 independent single-problem runs to 1e-10 before any number is
+reported, and the record asserts batch-8 problems/sec >= 2x batch-1.
+
+Emits CSV rows via benchmarks/run.py and writes a JSON record to
+``benchmarks/bench_serve.json`` (tracked, the perf trajectory).  ``--quick``
+(CI) runs batches {1, 8} with fewer reps and writes the untracked
+``benchmarks/bench_serve_quick.json``; ``--check PATH`` exits nonzero if the
+batch-8 vs batch-1 speedup fell below half the record at PATH (the speedup is
+a within-machine ratio, so the gate holds across differently-sized runners
+where absolute problems/sec would not).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+os.environ.setdefault("JAX_ENABLE_X64", "1")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+N_SITES = 8
+MAX_BOND = 16
+DAVIDSON_ITERS = 6
+SWEEP_H = 0.3
+
+
+def _specs_for(B):
+    import numpy as np
+
+    from repro.serve import ProblemSpec
+
+    return [
+        ProblemSpec.make(
+            "heisenberg",
+            N_SITES,
+            J=float(j),
+            h=SWEEP_H,
+            max_bond=MAX_BOND,
+            davidson_iters=DAVIDSON_ITERS,
+        )
+        for j in np.linspace(0.8, 1.2, B)
+    ]
+
+
+def _solve(space, mpos, spec, ops):
+    from repro.serve import run_dmrg_multi
+
+    return run_dmrg_multi(
+        space,
+        N_SITES,
+        mpos,
+        bond_schedule=spec.bond_schedule,
+        sweeps_per_bond=spec.sweeps_per_bond,
+        cutoff=spec.cutoff,
+        davidson_iters=spec.davidson_iters,
+        ops=ops,
+    )
+
+
+def _bench(quick=False):
+    from repro.core import run_dmrg
+    from repro.serve import StackedOps
+    from repro.serve.problems import build_problem
+
+    batches = (1, 8) if quick else (1, 8, 64)
+    reps = 2 if quick else 3
+    ops = StackedOps()
+    per_batch = {}
+    checked = None
+    for B in batches:
+        specs = _specs_for(B)
+        built = [build_problem(s) for s in specs]
+        space = built[0][0]
+        mpos = [m for _, m in built]
+        _solve(space, mpos, specs[0], ops)  # warm: trace this batch size
+        floor = ops.retraces
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            res = _solve(space, mpos, specs[0], ops)
+        dt = time.perf_counter() - t0
+        retraces = ops.retraces - floor
+        assert retraces == 0, (
+            f"batch {B}: {retraces} retraces in the timed window"
+        )
+        per_batch[B] = {
+            "batch": B,
+            "reps": reps,
+            "seconds_per_batch": dt / reps,
+            "problems_per_sec": B * reps / dt,
+            "retraces_timed": retraces,
+        }
+        if B == 8:  # correctness gate before any throughput claim
+            worst = 0.0
+            for b, spec in enumerate(specs):
+                ref = run_dmrg(
+                    space,
+                    None,
+                    N_SITES,
+                    bond_schedule=spec.bond_schedule,
+                    sweeps_per_bond=spec.sweeps_per_bond,
+                    davidson_iters=spec.davidson_iters,
+                    cutoff=spec.cutoff,
+                    mpo=mpos[b],
+                    algo="batched",
+                    jit_matvec=True,
+                )
+                worst = max(worst, abs(float(res.energies[b]) - ref.energy))
+            assert worst < 1e-10, (
+                f"batched energies diverge from singles: {worst}"
+            )
+            checked = worst
+    speedup = (
+        per_batch[8]["problems_per_sec"] / per_batch[1]["problems_per_sec"]
+    )
+    assert speedup >= 2.0, (
+        f"batch-8 throughput only {speedup:.2f}x batch-1 (need >= 2x)"
+    )
+    return {
+        "workload": {
+            "model": "heisenberg",
+            "n_sites": N_SITES,
+            "max_bond": MAX_BOND,
+            "sweeps_per_bond": 2,
+            "davidson_iters": DAVIDSON_ITERS,
+            "j_range": [0.8, 1.2],
+            "h": SWEEP_H,
+        },
+        "quick": quick,
+        "per_batch": {str(k): v for k, v in per_batch.items()},
+        "speedup_8v1": speedup,
+        "max_energy_diff_vs_single": checked,
+    }
+
+
+def _record(quick=False):
+    return _bench(quick=quick)
+
+
+def _rows(rec):
+    rows = []
+    for key in sorted(rec["per_batch"], key=int):
+        r = rec["per_batch"][key]
+        rows.append(
+            (
+                f"serve_batch{key}_problems_per_sec",
+                1e6 / max(r["problems_per_sec"], 1e-12),
+                f"{r['problems_per_sec']:.3f}/s",
+            )
+        )
+    rows.append(
+        ("serve_speedup_8v1", 0.0, f"{rec['speedup_8v1']:.2f}x")
+    )
+    rows.append(
+        (
+            "serve_batch8_max_energy_diff",
+            0.0,
+            f"{rec['max_energy_diff_vs_single']:.2e}",
+        )
+    )
+    return rows
+
+
+def run(quick=False, write_json=True):
+    """run.py entry point: yields (name, us_per_call, derived) CSV rows."""
+    rec = _record(quick=quick)
+    if write_json and not quick:
+        out = os.path.join(os.path.dirname(__file__), "bench_serve.json")
+        with open(out, "w") as f:
+            json.dump(rec, f, indent=2, sort_keys=True)
+    return _rows(rec)
+
+
+def main():
+    quick = "--quick" in sys.argv
+    ref = None
+    if "--check" in sys.argv:
+        # load the reference BEFORE running: a full run rewrites
+        # bench_serve.json and the gate must not compare a record to itself
+        ref_path = sys.argv[sys.argv.index("--check") + 1]
+        with open(ref_path) as f:
+            ref = json.load(f)
+    rec = _record(quick=quick)
+    out_name = "bench_serve_quick.json" if quick else "bench_serve.json"
+    out = os.path.join(os.path.dirname(__file__), out_name)
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=2, sort_keys=True)
+    for name, us, derived in _rows(rec):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+    print(f"record written to {out}")
+    if ref is not None:
+        got = rec["speedup_8v1"]
+        want = ref["speedup_8v1"]
+        print(f"check: batch-8 speedup {got:.2f}x vs record {want:.2f}x")
+        if got < want / 2.0:
+            print("CHECK FAILED: batch-8 speedup regressed > 2x vs record",
+                  file=sys.stderr)
+            return 1
+        print("CHECK OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

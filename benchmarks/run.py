@@ -9,7 +9,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 def main() -> None:
     from benchmarks import (bench_blocks, bench_contraction, bench_davidson,
-                            bench_dist, bench_lm, bench_scaling, bench_sweep)
+                            bench_dist, bench_lm, bench_scaling, bench_serve,
+                            bench_sweep)
 
     suites = [
         ("Fig5/10/13: contraction algorithms", bench_contraction.run),
@@ -19,6 +20,7 @@ def main() -> None:
         ("Fig6: sweep uniformity", bench_sweep.run),
         # subprocess: needs --xla_force_host_platform_device_count before jax
         ("Dist: plan cache + mesh sharding", bench_dist.run),
+        ("Serve: batched multi-problem throughput", bench_serve.run),
         ("LM cells (beyond paper)", bench_lm.run),
     ]
     print("name,us_per_call,derived")

@@ -45,6 +45,9 @@ def main(argv=None):
     ap.add_argument("--u", type=float, default=8.5)
     ap.add_argument("--check-ed", action="store_true",
                     help="compare against exact diagonalization (small only)")
+    ap.add_argument("--stats-json", metavar="PATH",
+                    help="write run stats + global plan-cache counters as "
+                         "JSON ('-' = stdout)")
     args = ap.parse_args(argv)
     if args.algo.endswith("_unplanned") and (args.shard or args.jit_matvec):
         ap.error("--shard/--jit-matvec require an engine algo, "
@@ -90,6 +93,27 @@ def main(argv=None):
         e0 = ground_energy(space, terms, n, charge=q)
         print(f"ED reference:                 {e0:.10f} "
               f"(|err|={abs(res.energy - e0):.2e})")
+
+    if args.stats_json:
+        import json
+
+        from repro.dist import cache_stats
+
+        payload = {
+            "energy": float(res.energy),
+            "energy_per_site": float(res.energy) / n,
+            "n_sites": n,
+            "algo": args.algo,
+            "schedule": schedule,
+            "caches": cache_stats(),
+        }
+        text = json.dumps(payload, indent=2, default=str)
+        if args.stats_json == "-":
+            print(text)
+        else:
+            with open(args.stats_json, "w") as fh:
+                fh.write(text + "\n")
+            print(f"stats written to {args.stats_json}")
 
 
 if __name__ == "__main__":

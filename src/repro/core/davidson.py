@@ -29,6 +29,12 @@ import numpy as np
 
 from ..tensor.blocksparse import BlockSparseTensor
 
+# Shared numerical thresholds — the batched multi-problem mirror
+# (repro/serve/multicore.py) must make bit-identical break decisions, so it
+# imports these instead of re-stating the literals.
+GRAM_NOISE_FLOOR = 1e-12   # scale factor for the Gram-identity noise floor
+GS_BREAKDOWN_TOL = 1e-12   # Gram-Schmidt breakdown threshold factor
+
 
 def _new_columns(V, AV, i) -> np.ndarray:
     """Fetch M[j, i] and W[j, i] for j <= i in one device round-trip."""
@@ -80,7 +86,7 @@ def davidson(
             q = q + AV[j].scale(s[j])
         q = q - x.scale(lam)
         qn2_gram = float(s @ W[: i + 1, : i + 1] @ s - lam * lam)
-        noise_floor = 1e-12 * max(1.0, lam * lam)
+        noise_floor = GRAM_NOISE_FLOOR * max(1.0, lam * lam)
         if qn2_gram > noise_floor:
             qn = float(np.sqrt(qn2_gram))
         else:
@@ -92,7 +98,7 @@ def davidson(
         for j in range(i + 1):
             q = q - V[j].scale(V[j].inner(q))
         qn2 = float(np.asarray(q.norm()))
-        if qn2 < 1e-12 * max(qn, 1.0):
+        if qn2 < GS_BREAKDOWN_TOL * max(qn, 1.0):
             # restart with A·(random): confined to range(A), so under the
             # bucket-padded matvec (dist/batch.py) the new direction stays
             # in the invariant unpadded subspace instead of acquiring O(1)
@@ -103,6 +109,8 @@ def davidson(
             for j in range(i + 1):
                 q = q - V[j].scale(V[j].inner(q))
             qn2 = float(np.asarray(q.norm()))
+            if qn2 < GS_BREAKDOWN_TOL * max(qn, 1.0):
+                break  # subspace exhausted; accept the current Ritz pair
         q = q.scale(1.0 / qn2)
         V.append(q)
         AV.append(matvec(q))

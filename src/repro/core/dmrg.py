@@ -46,10 +46,15 @@ def run_dmrg(
     shard_policy: Optional[BlockShardPolicy] = None,
     svd_method: Optional[str] = None,
     jit_env: Optional[bool] = None,
+    mpo=None,
 ) -> DMRGResult:
-    mpo = build_mpo(space, terms, n_sites, dtype=dtype)
-    if mpo_cutoff is not None:
-        mpo = compress_mpo(mpo, cutoff=mpo_cutoff)
+    # A pre-built MPO bypasses build/compress so callers comparing against a
+    # batched multi-problem run (repro/serve) optimize the EXACT same
+    # operator, not a re-compressed cousin with reordered degenerate blocks.
+    if mpo is None:
+        mpo = build_mpo(space, terms, n_sites, dtype=dtype)
+        if mpo_cutoff is not None:
+            mpo = compress_mpo(mpo, cutoff=mpo_cutoff)
     states = list(initial_states) if initial_states is not None else neel_states(space, n_sites)
     mps = product_state_mps(space, states, dtype=dtype)
     engine = DMRGEngine(

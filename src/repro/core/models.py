@@ -96,6 +96,28 @@ def triangular_hubbard_terms(
     return terms
 
 
+def heisenberg_chain_terms(n: int, j: float = 1.0, h: float = 0.0) -> List[OpTerm]:
+    """Nearest-neighbor Heisenberg chain J sum_i S_i . S_i+1 + h sum_i Sz_i.
+
+    The (J, h) parameterization is the serving subsystem's sweep axis: every
+    (J, h) with h != 0 shares one MPO block structure (and h == 0 another),
+    so parameter sweeps batch through a single compiled core.
+    """
+    terms: List[OpTerm] = []
+    for i in range(n - 1):
+        terms.append(term(0.5 * j, ("S+", i), ("S-", i + 1)))
+        terms.append(term(0.5 * j, ("S-", i), ("S+", i + 1)))
+        terms.append(term(j, ("Sz", i), ("Sz", i + 1)))
+    if h != 0.0:
+        for i in range(n):
+            terms.append(term(h, ("Sz", i)))
+    return terms
+
+
+def heisenberg_chain_system(n: int, j: float = 1.0, h: float = 0.0):
+    return spin_half_space(), heisenberg_chain_terms(n, j, h)
+
+
 def spin_system(lx: int, ly: int, j2: float = 0.5):
     return spin_half_space(), heisenberg_j1j2_terms(lx, ly, 1.0, j2)
 

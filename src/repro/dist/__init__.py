@@ -53,6 +53,27 @@ from .plan import (
 )
 from .shard import BlockShardPolicy, make_block_mesh
 
+
+def cache_stats(*engines) -> dict:
+    """One dict aggregating the three global plan caches' hit/miss/eviction
+    counters plus any passed-in engine ``stats()`` ledgers.
+
+    The serving subsystem's stats endpoint and the ``--stats-json`` flags on
+    the example drivers dump this; keys are stable so dashboards can diff
+    runs.  ``engines`` may be ``ContractionEngine`` instances (anything with
+    a ``stats()`` method); their ledgers land under ``"engines"`` in call
+    order.
+    """
+    out = {
+        "plan_cache": global_plan_cache.stats(),
+        "decomp_plan_cache": global_decomp_cache.stats(),
+        "env_plan_cache": global_env_cache.stats(),
+    }
+    if engines:
+        out["engines"] = [e.stats() for e in engines]
+    return out
+
+
 __all__ = [
     "ContractionEngine",
     "ContractionPlan",
@@ -69,6 +90,7 @@ __all__ = [
     "global_plan_cache",
     "global_decomp_cache",
     "global_env_cache",
+    "cache_stats",
     "svd_split_planned",
     "BlockShardPolicy",
     "make_block_mesh",

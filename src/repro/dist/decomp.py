@@ -110,6 +110,129 @@ def _rsvd_flops(rp: int, cp: int, sketch: int, power_iters: int) -> float:
     return gemms + qrs + svd_flop_estimate(sketch, cp)
 
 
+# The traced bodies and the host truncation live at module level (not as
+# engine methods) so the multi-problem solver (repro/serve/multicore.py) can
+# wrap the *same* code in ``jax.vmap`` and in per-problem host loops —
+# per-problem SVD/truncation semantics then cannot diverge from the
+# single-problem engine by construction.
+def svd_core_body(
+    plan: DecompositionPlan,
+    absorb: str,
+    methods: Tuple[str, ...],
+    sketch: int,
+    rsvd_power_iters: int = 2,
+    rsvd_seed: int = 0,
+):
+    """Assembly + batched SVD + masking + absorb, one traceable function.
+
+    Input: theta's block arrays in ``plan.block_order``.  Output: per bucket
+    ``(U, s, Vh)`` with padding singular values masked to exact zero and the
+    absorb scaling applied to U ("left") or Vh ("right"), plus the
+    concatenated singular values of all buckets (the only array the caller
+    syncs to host).  The gather tables fold into the trace as constants, so
+    a compiled executable is keyed purely by the bucketed block structure.
+    """
+
+    def body(blocks):
+        flat = jnp.pad(jnp.concatenate([b.reshape(-1) for b in blocks]), (0, 1))
+        out, s_parts = [], []
+        for bi, bucket in enumerate(plan.buckets):
+            mats = flat[bucket.gather]
+            if methods[bi] == "rsvd":
+                U, s, Vh = _randomized_svd(
+                    mats, sketch, rsvd_power_iters, rsvd_seed + bi
+                )
+            else:
+                U, s, Vh = jnp.linalg.svd(mats, full_matrices=False)
+            # padding rows/cols contribute ~eps junk values; zero them so
+            # the host truncation only ever sees the K=min(R,C) real ones
+            mask = jnp.arange(s.shape[-1])[None, :] < bucket.k_true[:, None]
+            s = jnp.where(mask, s, jnp.zeros((), s.dtype))
+            if absorb == "left":
+                U = U * s[:, None, :].astype(U.dtype)
+            elif absorb == "right":
+                Vh = Vh * s[:, :, None].astype(Vh.dtype)
+            out.append((U, s, Vh))
+            s_parts.append(s.reshape(-1))
+        return tuple(out), jnp.concatenate(s_parts)
+
+    return body
+
+
+def slice_core_body(plan: DecompositionPlan, m_q: Tuple[int, ...]):
+    """Slice every retained U column / V row / singular value, traceable.
+
+    ``m_q`` (retained count per sector) is static — it keys the compiled
+    executable.  Returns flat tuples of U blocks, V blocks and per-sector
+    singular values in plan order, skipping sectors with ``m_q == 0``.
+    """
+
+    def body(bucket_out):
+        u_out, v_out, s_out = [], [], []
+        for si, sec in enumerate(plan.sectors):
+            m = m_q[si]
+            if m == 0:
+                continue
+            U, s, Vh = bucket_out[sec.bucket]
+            Uq, Vq = U[sec.slot], Vh[sec.slot]
+            s_out.append(s[sec.slot, :m])
+            for rk, rd, ro in zip(sec.row_keys, sec.rdims, sec.roffs):
+                shp = tuple(
+                    ix.sector_dim(sk) for ix, sk in zip(plan.row_ix, rk)
+                ) + (m,)
+                u_out.append(Uq[ro : ro + rd, :m].reshape(shp))
+            for ck, cd, co in zip(sec.col_keys, sec.cdims, sec.coffs):
+                shp = (m,) + tuple(
+                    ix.sector_dim(sk) for ix, sk in zip(plan.col_ix, ck)
+                )
+                v_out.append(Vq[:m, co : co + cd].reshape(shp))
+        return tuple(u_out), tuple(v_out), tuple(s_out)
+
+    return body
+
+
+def host_truncate(
+    plan: DecompositionPlan,
+    s_host: np.ndarray,
+    k_out,
+    max_bond: int,
+    cutoff: float,
+) -> Tuple[np.ndarray, float]:
+    """Global truncation on the host-synced singular values of one problem.
+
+    ``s_host`` is the concatenated (masked) singular-value vector a
+    ``svd_core_body`` call produced; ``k_out`` the per-bucket value counts.
+    Returns ``(m_q, trunc_err)``: retained count per plan sector (ties broken
+    deterministically by (sector, position)) and the tail sum of squares.
+    """
+    sec_vals: list = [None] * plan.num_sectors
+    off = 0
+    for b, bucket in enumerate(plan.buckets):
+        kb = k_out[b]
+        for slot, si in enumerate(bucket.sectors):
+            avail = min(plan.sectors[si].K, kb)
+            sec_vals[si] = s_host[off + slot * kb : off + slot * kb + avail]
+        off += len(bucket.sectors) * kb
+
+    vals = np.concatenate(sec_vals)
+    sec_id = np.concatenate(
+        [np.full(len(v), si, np.int64) for si, v in enumerate(sec_vals)]
+    )
+    pos_id = np.concatenate([np.arange(len(v)) for v in sec_vals])
+    order = np.lexsort((pos_id, sec_id, -vals))
+    smax = float(vals[order[0]]) if len(order) else 1.0
+    n_keep = int(min(int(max_bond), int(np.sum(vals > cutoff * smax))))
+    n_keep = max(n_keep, 1)
+    kept = order[:n_keep]
+    m_q = np.zeros(plan.num_sectors, np.int64)
+    np.add.at(m_q, sec_id[kept], 1)
+    # direct tail sum, like the seed: exactly 0.0 when nothing is truncated
+    # (a total-minus-kept difference would leave ~eps noise of either sign
+    # from summing the same multiset in two orders)
+    trunc_err = float(np.sum(vals[order[n_keep:]] ** 2))
+    return m_q, trunc_err
+
+
 class DecompositionEngine:
     """Executes cached DecompositionPlans as bucketed batched SVDs.
 
@@ -200,41 +323,15 @@ class DecompositionEngine:
     def _build_core(
         self, plan: DecompositionPlan, absorb: str, methods: Tuple[str, ...], sketch: int
     ):
-        """Assembly + batched SVD + masking + absorb, one traced program.
+        """Compile (or wrap eagerly) the shared ``svd_core_body``.
 
-        Input: theta's block arrays in ``plan.block_order``.  Output: per
-        bucket ``(U, s, Vh)`` with padding singular values masked to exact
-        zero and the absorb scaling applied to U ("left") or Vh ("right"),
-        plus the concatenated singular values of all buckets (the only array
-        the caller syncs to host).  The gather tables fold into the trace as
-        constants, so the compiled executable is keyed purely by the bucketed
-        block structure — the same compile-once trick as ``pad_block_sparse``.
+        One compiled executable per bucketed structure — the same
+        compile-once trick as ``pad_block_sparse``.
         """
         engine = self
-
-        def body(blocks):
-            flat = jnp.pad(jnp.concatenate([b.reshape(-1) for b in blocks]), (0, 1))
-            out, s_parts = [], []
-            for bi, bucket in enumerate(plan.buckets):
-                mats = flat[bucket.gather]
-                if methods[bi] == "rsvd":
-                    U, s, Vh = _randomized_svd(
-                        mats, sketch, engine.rsvd_power_iters, engine.rsvd_seed + bi
-                    )
-                else:
-                    U, s, Vh = jnp.linalg.svd(mats, full_matrices=False)
-                # padding rows/cols contribute ~eps junk values; zero them so
-                # the host truncation only ever sees the K=min(R,C) real ones
-                mask = jnp.arange(s.shape[-1])[None, :] < bucket.k_true[:, None]
-                s = jnp.where(mask, s, jnp.zeros((), s.dtype))
-                if absorb == "left":
-                    U = U * s[:, None, :].astype(U.dtype)
-                elif absorb == "right":
-                    Vh = Vh * s[:, :, None].astype(Vh.dtype)
-                out.append((U, s, Vh))
-                s_parts.append(s.reshape(-1))
-            return tuple(out), jnp.concatenate(s_parts)
-
+        body = svd_core_body(
+            plan, absorb, methods, sketch, self.rsvd_power_iters, self.rsvd_seed
+        )
         if not self.jit:
             return body
 
@@ -245,7 +342,7 @@ class DecompositionEngine:
         return jax.jit(traced)
 
     def _build_slice_core(self, plan: DecompositionPlan, m_q: Tuple[int, ...]):
-        """Slice every retained U column / V row / singular value in ONE call.
+        """Compile (or wrap eagerly) the shared ``slice_core_body``.
 
         The retained counts ``m_q`` are static (they key the compiled
         executable): during convergence they drift and retrace like the
@@ -255,28 +352,7 @@ class DecompositionEngine:
         dispatch per block.
         """
         engine = self
-
-        def body(bucket_out):
-            u_out, v_out, s_out = [], [], []
-            for si, sec in enumerate(plan.sectors):
-                m = m_q[si]
-                if m == 0:
-                    continue
-                U, s, Vh = bucket_out[sec.bucket]
-                Uq, Vq = U[sec.slot], Vh[sec.slot]
-                s_out.append(s[sec.slot, :m])
-                for rk, rd, ro in zip(sec.row_keys, sec.rdims, sec.roffs):
-                    shp = tuple(
-                        ix.sector_dim(sk) for ix, sk in zip(plan.row_ix, rk)
-                    ) + (m,)
-                    u_out.append(Uq[ro : ro + rd, :m].reshape(shp))
-                for ck, cd, co in zip(sec.col_keys, sec.cdims, sec.coffs):
-                    shp = (m,) + tuple(
-                        ix.sector_dim(sk) for ix, sk in zip(plan.col_ix, ck)
-                    )
-                    v_out.append(Vq[:m, co : co + cd].reshape(shp))
-            return tuple(u_out), tuple(v_out), tuple(s_out)
-
+        body = slice_core_body(plan, m_q)
         if not self.jit:
             return body
 
@@ -335,32 +411,8 @@ class DecompositionEngine:
         # ---- the one host sync: all singular values, already masked
         s_host = np.asarray(jax.device_get(s_cat))
         k_out = [int(out[1].shape[-1]) for out in bucket_out]
-        sec_vals: list = [None] * plan.num_sectors
-        off = 0
-        for b, bucket in enumerate(plan.buckets):
-            kb = k_out[b]
-            for slot, si in enumerate(bucket.sectors):
-                avail = min(plan.sectors[si].K, kb)
-                sec_vals[si] = s_host[off + slot * kb : off + slot * kb + avail]
-            off += len(bucket.sectors) * kb
-
-        # ---- global truncation, deterministic tie-break (sector, position)
-        vals = np.concatenate(sec_vals)
-        sec_id = np.concatenate(
-            [np.full(len(v), si, np.int64) for si, v in enumerate(sec_vals)]
-        )
-        pos_id = np.concatenate([np.arange(len(v)) for v in sec_vals])
-        order = np.lexsort((pos_id, sec_id, -vals))
-        smax = float(vals[order[0]]) if len(order) else 1.0
-        n_keep = int(min(int(max_bond), int(np.sum(vals > cutoff * smax))))
-        n_keep = max(n_keep, 1)
-        kept = order[:n_keep]
-        m_q = np.zeros(plan.num_sectors, np.int64)
-        np.add.at(m_q, sec_id[kept], 1)
-        # direct tail sum, like the seed: exactly 0.0 when nothing is
-        # truncated (a total-minus-kept difference would leave ~eps noise of
-        # either sign from summing the same multiset in two orders)
-        trunc_err = float(np.sum(vals[order[n_keep:]] ** 2))
+        # global truncation, deterministic tie-break (sector, position)
+        m_q, trunc_err = host_truncate(plan, s_host, k_out, max_bond, cutoff)
 
         # ---- slice the retained columns/rows into output blocks: one
         # compiled call keyed by the kept-count tuple (stable at steady state)

@@ -30,6 +30,7 @@ keys and Index metadata are concrete even under tracing).
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -788,40 +789,61 @@ class EnvironmentPlan:
 class _SignatureLRU:
     """LRU cache of plans keyed by structural signature.
 
-    ``hits``/``misses`` count lookups; ``size`` is live entries.  Shared
-    machinery for contraction and decomposition plans — subclasses provide
-    ``_signature`` and ``_build``.
+    ``hits``/``misses``/``evictions`` count lookups and capacity evictions;
+    ``size`` is live entries.  Shared machinery for contraction and
+    decomposition plans — subclasses provide ``_signature`` and ``_build``.
+
+    Thread-safe: the serving subsystem (``repro/serve``) builds problems and
+    fetches plans from multiple threads against the module-level global
+    caches, so every mutation happens under a per-cache lock.  Builds run
+    inside the lock on purpose — a plan object carries its compiled cores
+    (``_exec``), so two racing builds of the same signature would silently
+    drop one core set.  Lock ordering is acyclic: an ``EnvPlanCache`` build
+    acquires the contraction ``PlanCache`` lock (for its three step plans),
+    never the reverse.
     """
 
     def __init__(self, maxsize: int = 4096):
         self.maxsize = maxsize
         self._plans: OrderedDict = OrderedDict()
+        self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def _get(self, sig, build):
-        plan = self._plans.get(sig)
-        if plan is not None:
-            self.hits += 1
-            self._plans.move_to_end(sig)
+        with self._lock:
+            plan = self._plans.get(sig)
+            if plan is not None:
+                self.hits += 1
+                self._plans.move_to_end(sig)
+                return plan
+            self.misses += 1
+            plan = build()
+            self._plans[sig] = plan
+            while len(self._plans) > self.maxsize:
+                self._plans.popitem(last=False)
+                self.evictions += 1
             return plan
-        self.misses += 1
-        plan = build()
-        self._plans[sig] = plan
-        while len(self._plans) > self.maxsize:
-            self._plans.popitem(last=False)
-        return plan
 
     def __len__(self) -> int:
         return len(self._plans)
 
     def clear(self):
-        self._plans.clear()
-        self.hits = 0
-        self.misses = 0
+        with self._lock:
+            self._plans.clear()
+            self.hits = 0
+            self.misses = 0
+            self.evictions = 0
 
     def stats(self) -> Dict[str, int]:
-        return {"hits": self.hits, "misses": self.misses, "size": len(self._plans)}
+        with self._lock:
+            return {
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "size": len(self._plans),
+            }
 
 
 class PlanCache(_SignatureLRU):

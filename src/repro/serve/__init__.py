@@ -1,0 +1,54 @@
+"""DMRG-as-a-service: vmapped multi-problem solving + batched serving.
+
+The paper's processing-rate framing (their 99x over ITensor comes from
+keeping batched dense GEMMs saturated) extends naturally from one problem to
+many: every problem sharing a charge structure is shape-identical after
+padding, so a J/h parameter sweep or a disorder scan batches through ONE
+compiled pipeline with a leading problem axis.  Throughput (problems/sec),
+not single-run latency, is the metric (DESIGN.md Sec. 3.7).
+
+Three layers:
+
+- ``stacked`` / ``multicore``: the multi-problem core — stacked block-sparse
+  tensors, batched Davidson / truncated SVD / env updates with per-problem
+  host decisions at the existing one-sync points, and ``run_dmrg_multi``;
+- ``problems`` / ``scheduler``: model registry, structure-signature grouping
+  and power-of-two batch slots with a warmup hook;
+- ``service``: the async front end — bounded request queue with
+  submit/poll/result, a worker thread draining batch slots, and a structured
+  stats endpoint — exposed as ``python -m repro.serve``.
+"""
+from .multicore import (
+    MultiDMRGResult,
+    MultiProblemEngine,
+    davidson_multi,
+    mpo_structure_signature,
+    run_dmrg_multi,
+    svd_split_multi,
+)
+from .problems import MODEL_BUILDERS, build_problem, group_key
+from .scheduler import BatchScheduler, BatchSlot, ProblemSpec
+from .service import DEVICE_LOCK, DMRGService, ServeQueueFull
+from .stacked import StackedOps, broadcast_tensor, stack_tensors, unstack_tensor
+
+__all__ = [
+    "BatchScheduler",
+    "BatchSlot",
+    "DEVICE_LOCK",
+    "DMRGService",
+    "MODEL_BUILDERS",
+    "MultiDMRGResult",
+    "MultiProblemEngine",
+    "ProblemSpec",
+    "ServeQueueFull",
+    "StackedOps",
+    "broadcast_tensor",
+    "build_problem",
+    "davidson_multi",
+    "group_key",
+    "mpo_structure_signature",
+    "run_dmrg_multi",
+    "stack_tensors",
+    "svd_split_multi",
+    "unstack_tensor",
+]

@@ -1,0 +1,490 @@
+"""Multi-problem DMRG core: B parameter-sweep problems through one pipeline.
+
+``davidson_multi`` / ``svd_split_multi`` / ``MultiProblemEngine`` mirror
+``core/davidson.py`` / ``dist/decomp.py`` / ``core/sweep.py`` over stacked
+tensors (``serve/stacked.py``): every device-side body is the existing
+single-problem code wrapped in ``jax.vmap`` — per-problem numerics cannot
+diverge from a single run by construction — and every host-side decision
+(Davidson convergence, global truncation) is made independently per problem
+at the SAME one-sync points the single-problem engines already have, so a
+batch of B problems costs the same number of host round-trips as one.
+
+Per-problem truncation inside one shared block structure works by masking:
+each split keeps ``max_b m_q[b]`` bond states per sector (the batch bond is
+the union), and zeroes each problem's U columns, V rows AND singular values
+beyond its own retained count.  Both sides must be masked — a nonzero
+orthonormal U column with a zeroed V row would still leak into the
+environments.  The retained values within a sector are always a prefix
+(singular values descend, ties break by position), so prefix masks are
+exact.  Phantom bond slots then carry exact zeros through envs, matvecs and
+later splits: each problem evolves exactly as if it ran alone at its own
+bond dimension (tests/test_serve.py asserts <1e-10 on energies and svals).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.davidson import GRAM_NOISE_FLOOR, GS_BREAKDOWN_TOL
+from ..core.env import left_edge, right_edge
+from ..core.mps import neel_states, product_state_mps
+from ..dist.decomp import _cache_exec, host_truncate, svd_core_body
+from ..dist.plan import global_decomp_cache
+from ..tensor.blocksparse import BlockSparseTensor, flip_flow
+from ..tensor.qn import IN, Index, OUT, qzero
+from .stacked import (
+    StackedOps,
+    batch_size,
+    binner,
+    blincomb,
+    bnorm,
+    broadcast_tensor,
+    bscale,
+    bselect,
+    pad_stacked,
+    stack_tensors,
+    unpad_stacked,
+)
+
+
+def mpo_structure_signature(mpo: Sequence[BlockSparseTensor]) -> Tuple:
+    """Structural signature of an MPO: per site (indices, charge, block keys).
+
+    Two problems batch together iff their MPOs share this signature — then
+    every plan, compiled core and padded structure of the sweep is identical
+    and the batch axis is purely a value axis.
+    """
+    return tuple(
+        (t.indices, t.charge, tuple(sorted(t.blocks))) for t in mpo
+    )
+
+
+# ------------------------------------------------------------------ Davidson
+def _new_columns_multi(V, AV, i) -> np.ndarray:
+    """M[:, j, i] and W[:, j, i] for j <= i, one device round-trip: [2(i+1), B]."""
+    vals = [binner(V[j], AV[i]) for j in range(i + 1)]
+    vals += [binner(AV[j], AV[i]) for j in range(i + 1)]
+    return np.real(np.asarray(jax.device_get(jnp.stack(vals))))
+
+
+def davidson_multi(
+    matvec: Callable[[BlockSparseTensor], BlockSparseTensor],
+    x0: BlockSparseTensor,
+    n_iter: int = 2,
+    tol: float = 1e-10,
+    seed: int = 0,
+) -> Tuple[np.ndarray, BlockSparseTensor]:
+    """Batched ``core.davidson.davidson``: per-problem eigenpairs, shared syncs.
+
+    The subspace vectors are stacked, so each problem spans its OWN Krylov
+    space; only the sync points are shared.  Host-side control flow mirrors
+    the single solver exactly per problem — same Gram-identity residual with
+    the same noise floor, same exact-norm fallback, same Gram-Schmidt
+    breakdown threshold and same seeded restart — except that a converged
+    problem keeps riding along (its recorded Ritz data frozen, its residual
+    column near zero) until the whole batch finishes.  Returns
+    ``(eigenvalues [B], stacked eigenvector approximation)``.
+    """
+    B = batch_size(x0)
+    x = bscale(x0, 1.0 / bnorm(x0))
+    V = [x]
+    AV = [matvec(x)]
+    if n_iter <= 0:
+        lam = np.real(np.asarray(jax.device_get(binner(V[0], AV[0]))))
+        return lam, x
+
+    dim = n_iter + 1
+    M = np.zeros((B, dim, dim))  # <v_j | A v_i> per problem
+    W = np.zeros((B, dim, dim))  # <A v_j | A v_i> per problem
+    keep_s = np.zeros((B, dim))
+    keep_s[:, 0] = 1.0
+    keep_lam = np.zeros(B)
+    done = np.zeros(B, dtype=bool)
+
+    for i in range(n_iter):
+        cols = _new_columns_multi(V, AV, i)
+        M[:, : i + 1, i] = M[:, i, : i + 1] = cols[: i + 1].T
+        W[:, : i + 1, i] = W[:, i, : i + 1] = cols[i + 1 :].T
+        evals, evecs = np.linalg.eigh(M[:, : i + 1, : i + 1])
+        lam, s = evals[:, 0], evecs[:, :, 0]
+        act = ~done
+        # freeze this iteration's Ritz data for still-active problems; a
+        # problem that converges below keeps exactly the state it broke on
+        keep_lam[act] = lam[act]
+        keep_s[act, : i + 1] = s[act]
+        keep_s[act, i + 1 :] = 0.0
+        if i == n_iter - 1:
+            break
+
+        # residual q = A x - lam x (device-side), norm from the Gram identity
+        # above the per-problem cancellation noise floor, measured exactly
+        # otherwise (converged regime only) — one batch sync either way
+        q = blincomb(AV[: i + 1], s) - bscale(blincomb(V[: i + 1], s), lam)
+        qn2_gram = np.einsum("bi,bij,bj->b", s, W[:, : i + 1, : i + 1], s) - lam * lam
+        noise_floor = GRAM_NOISE_FLOOR * np.maximum(1.0, lam * lam)
+        qn = np.sqrt(np.where(qn2_gram > 0.0, qn2_gram, 0.0))
+        need_exact = act & ~(qn2_gram > noise_floor)
+        if need_exact.any():
+            qn_exact = np.asarray(jax.device_get(bnorm(q)))
+            qn = np.where(need_exact, qn_exact, qn)
+        done = done | (act & (qn < tol))
+        if done.all():
+            break
+
+        # modified Gram-Schmidt vs all v_j, per-problem coefficients
+        for j in range(i + 1):
+            q = q - bscale(V[j], binner(V[j], q))
+        qn2 = np.asarray(jax.device_get(bnorm(q)))
+        breakdown = (~done) & (qn2 < GS_BREAKDOWN_TOL * np.maximum(qn, 1.0))
+        if breakdown.any():
+            # restart with A·(random), confined to range(A) like the single
+            # solver; the same PRNG key on the same structure gives the same
+            # restart vector a padded single run would draw
+            r = matvec(
+                broadcast_tensor(
+                    BlockSparseTensor.random(
+                        x0.indices, x0.charge, jax.random.PRNGKey(seed + i),
+                        dtype=x0.dtype,
+                    ),
+                    B,
+                )
+            )
+            for j in range(i + 1):
+                r = r - bscale(V[j], binner(V[j], r))
+            rn2 = np.asarray(jax.device_get(bnorm(r)))
+            q = bselect(breakdown, r, q)
+            qn2 = np.where(breakdown, rn2, qn2)
+        # converged problems still need a FINITE column (their residual is
+        # ~0); leave it unscaled instead of dividing by its vanishing norm
+        denom = np.where(done | (qn2 == 0.0), 1.0, qn2)
+        q = bscale(q, 1.0 / denom)
+        V.append(q)
+        AV.append(matvec(q))
+
+    x = blincomb(V, keep_s[:, : len(V)])
+    return keep_lam.copy(), bscale(x, 1.0 / bnorm(x))
+
+
+# ----------------------------------------------------------------- SVD split
+def _slice_core_body_multi(plan, m_q: Tuple[int, ...]):
+    """Per-problem variant of ``dist.decomp.slice_core_body``: additionally
+    multiplies each sector's U columns, V rows and singular values by a
+    per-problem prefix mask, zeroing the bond slots beyond that problem's own
+    retained count (see module docstring)."""
+
+    def body(bucket_out, masks):
+        u_out, v_out, s_out = [], [], []
+        mi = 0
+        for si, sec in enumerate(plan.sectors):
+            m = m_q[si]
+            if m == 0:
+                continue
+            mask = masks[mi]
+            mi += 1
+            U, s, Vh = bucket_out[sec.bucket]
+            Uq, Vq = U[sec.slot], Vh[sec.slot]
+            s_out.append(s[sec.slot, :m] * mask)
+            for rk, rd, ro in zip(sec.row_keys, sec.rdims, sec.roffs):
+                shp = tuple(
+                    ix.sector_dim(sk) for ix, sk in zip(plan.row_ix, rk)
+                ) + (m,)
+                u_out.append((Uq[ro : ro + rd, :m] * mask[None, :]).reshape(shp))
+            for ck, cd, co in zip(sec.col_keys, sec.cdims, sec.coffs):
+                shp = (m,) + tuple(
+                    ix.sector_dim(sk) for ix, sk in zip(plan.col_ix, ck)
+                )
+                v_out.append((Vq[:m, co : co + cd] * mask[:, None]).reshape(shp))
+        return tuple(u_out), tuple(v_out), tuple(s_out)
+
+    return body
+
+
+def svd_split_multi(
+    theta: BlockSparseTensor,
+    n_row_modes: int,
+    max_bond: int,
+    cutoff: float = 1e-12,
+    absorb: str = "right",
+    ops: Optional[StackedOps] = None,
+):
+    """Batched planned truncated SVD over a stacked theta.
+
+    One vmapped ``svd_core_body`` call (plan shared with single-problem runs
+    through the global DecompPlanCache), ONE host sync of all B problems'
+    singular values, B independent ``host_truncate`` decisions — the exact
+    single-problem logic — and one vmapped masked slice core.  Returns
+    ``(U, V, svals_by_sector [B, m], trunc_err [B])``; problem b's retained
+    values are the first ``m_q[b]`` entries of each sector, zeros beyond.
+    """
+    plan = global_decomp_cache.get(theta, n_row_modes)
+    methods = ("svd",) * plan.num_buckets
+    absorb_key = absorb if absorb in ("left", "right") else "none"
+    key = ("multi", absorb_key)
+    core = plan._exec.get(key)
+    if core is None:
+        body = svd_core_body(plan, absorb_key, methods, 0)
+        core = _wrap_multi(body, ops)
+        _cache_exec(plan, key, core)
+    bucket_out, s_cat = core(tuple(theta.blocks[k] for k in plan.block_order))
+
+    # ---- the one host sync: all B problems' masked singular values
+    s_host = np.asarray(jax.device_get(s_cat))  # [B, total]
+    B = s_host.shape[0]
+    k_out = [int(out[1].shape[-1]) for out in bucket_out]
+    m_qs = np.zeros((B, plan.num_sectors), np.int64)
+    errs = np.zeros(B)
+    for b in range(B):
+        m_qs[b], errs[b] = host_truncate(plan, s_host[b], k_out, max_bond, cutoff)
+    keep = m_qs.max(axis=0)
+    m_tuple = tuple(int(x) for x in keep)
+
+    masks = tuple(
+        jnp.asarray(np.arange(m_tuple[si])[None, :] < m_qs[:, si : si + 1])
+        for si in range(plan.num_sectors)
+        if m_tuple[si] > 0
+    )
+    slice_key = ("multi-slice", absorb_key, m_tuple)
+    slice_core = plan._exec.get(slice_key)
+    if slice_core is None:
+        slice_core = _wrap_multi(_slice_core_body_multi(plan, m_tuple), ops)
+        _cache_exec(plan, slice_key, slice_core)
+    u_flat, v_flat, s_flat = slice_core(bucket_out, masks)
+
+    new_sectors, u_blocks, v_blocks, svals = [], {}, {}, {}
+    ui = vi = si_out = 0
+    for si, sec in enumerate(plan.sectors):
+        m = m_tuple[si]
+        if m == 0:
+            continue
+        svals[sec.q] = s_flat[si_out]
+        si_out += 1
+        new_sectors.append((sec.q, m))
+        for rk in sec.row_keys:
+            u_blocks[(sec.q, rk)] = u_flat[ui]
+            ui += 1
+        for ck in sec.col_keys:
+            v_blocks[(sec.q, ck)] = v_flat[vi]
+            vi += 1
+
+    bond_u = Index(tuple(new_sectors), IN, "bond")
+    bond_v = Index(tuple(new_sectors), OUT, "bond")
+    sector_index = {q: i for i, (q, _) in enumerate(new_sectors)}
+    U_t = BlockSparseTensor(
+        list(plan.row_ix) + [bond_u],
+        {rk + (sector_index[q],): blk for (q, rk), blk in u_blocks.items()},
+        qzero(theta.indices[0].nq),
+    )
+    V_t = BlockSparseTensor(
+        [bond_v] + list(plan.col_ix),
+        {(sector_index[q],) + ck: blk for (q, ck), blk in v_blocks.items()},
+        theta.charge,
+    )
+    return U_t, V_t, svals, errs
+
+
+def _wrap_multi(body, ops: Optional[StackedOps]):
+    """jit(vmap(body)), charging (re)traces to ``ops`` when given.
+
+    Cores live on the globally cached plan, so like the single-problem
+    engines a trace is attributed to the ops instance that first compiled it.
+    """
+
+    def traced(*args):
+        if ops is not None:
+            ops.retraces += 1
+        return body(*args)
+
+    return jax.jit(jax.vmap(traced))
+
+
+# -------------------------------------------------------------------- engine
+@dataclasses.dataclass
+class MultiSweepStats:
+    energies: np.ndarray        # [B] final pair energy per problem
+    max_bond: int               # union (batch) bond dimension
+    trunc_err: np.ndarray       # [B] max truncation error per problem
+    seconds: float
+    davidson_seconds: float = 0.0
+    svd_seconds: float = 0.0
+    env_seconds: float = 0.0
+
+
+class MultiProblemEngine:
+    """Two-site DMRG sweeps over a stacked batch of problems.
+
+    The sweep logic mirrors ``core.sweep.DMRGEngine`` (padded operands,
+    per-site padded-MPO cache, absorb-along-the-sweep splits, incremental
+    envs) with every stage routed through one shared ``StackedOps`` —
+    compiled callables and plan caches persist across engines/batches, which
+    is what makes steady-state serving retrace-free.
+    """
+
+    def __init__(
+        self,
+        mps_stacked: List[BlockSparseTensor],
+        mpo_stacked: List[BlockSparseTensor],
+        ops: Optional[StackedOps] = None,
+        davidson_iters: int = 2,
+        seed: int = 0,
+    ):
+        assert len(mps_stacked) == len(mpo_stacked)
+        self.T = mps_stacked
+        self.W = mpo_stacked
+        self.ops = ops if ops is not None else StackedOps()
+        self.davidson_iters = davidson_iters
+        self.seed = seed
+        self.n = len(mps_stacked)
+        self.B = batch_size(mps_stacked[0])
+        self._mpo_padded: List[Optional[BlockSparseTensor]] = [None] * self.n
+        self._init_envs()
+
+    def _padded_mpo(self, j: int) -> BlockSparseTensor:
+        if self._mpo_padded[j] is None:
+            self._mpo_padded[j] = pad_stacked(self.W[j])
+        return self._mpo_padded[j]
+
+    def _init_envs(self):
+        n, T, W = self.n, self.T, self.W
+        self.left_envs: List[Optional[BlockSparseTensor]] = [None] * (n + 1)
+        self.right_envs: List[Optional[BlockSparseTensor]] = [None] * (n + 1)
+        # the edge builders read only indices/dtype, so they accept stacked
+        # operands; the (1,1,1) ones block is shared across the batch
+        self.left_envs[0] = broadcast_tensor(left_edge(T[0], W[0]), self.B)
+        self.right_envs[n - 1] = broadcast_tensor(right_edge(T[n - 1], W[n - 1]), self.B)
+        for j in range(n - 2, 0, -1):
+            self.right_envs[j] = self.ops.env_update(
+                "right", self.right_envs[j + 1], T[j + 1], W[j + 1]
+            )
+
+    def max_bond(self) -> int:
+        dims = [t.indices[2].dim for t in self.T[:-1]]
+        return max(dims) if dims else 1
+
+    def _optimize_pair(self, j: int, max_bond: int, cutoff: float, absorb: str):
+        T = self.T
+        theta = self.ops.contract(T[j], T[j + 1], ((2,), (0,)))
+        orig_indices = theta.indices
+        A = pad_stacked(self.left_envs[j])
+        Bx = pad_stacked(self.right_envs[j + 1])
+        theta_p = pad_stacked(theta)
+        mv = self.ops.matvec_fn(A, self._padded_mpo(j), self._padded_mpo(j + 1), Bx)
+        t_dav = time.perf_counter()
+        lam, theta_p = davidson_multi(
+            mv, theta_p, n_iter=self.davidson_iters, seed=self.seed + j
+        )
+        dav_dt = time.perf_counter() - t_dav
+        theta = unpad_stacked(theta_p, orig_indices)
+        t_svd = time.perf_counter()
+        U, V, _, errs = svd_split_multi(
+            theta, 2, max_bond=max_bond, cutoff=cutoff, absorb=absorb,
+            ops=self.ops,
+        )
+        svd_dt = time.perf_counter() - t_svd
+        T[j] = flip_flow(U, 2)
+        T[j + 1] = flip_flow(V, 0)
+        return lam, errs, dav_dt, svd_dt
+
+    def sweep(self, max_bond: int, cutoff: float = 1e-12) -> MultiSweepStats:
+        """One full left-to-right + right-to-left sweep over the batch."""
+        n = self.n
+        energies = None
+        max_err = np.zeros(self.B)
+        dav_secs = svd_secs = env_secs = 0.0
+        t0 = time.perf_counter()
+
+        for j in range(n - 1):  # left -> right
+            lam, errs, dav_dt, svd_dt = self._optimize_pair(
+                j, max_bond, cutoff, absorb="right"
+            )
+            te = time.perf_counter()
+            self.left_envs[j + 1] = self.ops.env_update(
+                "left", self.left_envs[j], self.T[j], self.W[j]
+            )
+            env_secs += time.perf_counter() - te
+            energies = lam
+            max_err = np.maximum(max_err, errs)
+            dav_secs += dav_dt
+            svd_secs += svd_dt
+
+        for j in range(n - 2, -1, -1):  # right -> left
+            lam, errs, dav_dt, svd_dt = self._optimize_pair(
+                j, max_bond, cutoff, absorb="left"
+            )
+            te = time.perf_counter()
+            self.right_envs[j] = self.ops.env_update(
+                "right", self.right_envs[j + 1], self.T[j + 1], self.W[j + 1]
+            )
+            env_secs += time.perf_counter() - te
+            energies = lam
+            max_err = np.maximum(max_err, errs)
+            dav_secs += dav_dt
+            svd_secs += svd_dt
+
+        return MultiSweepStats(
+            energies=energies,
+            max_bond=self.max_bond(),
+            trunc_err=max_err,
+            seconds=time.perf_counter() - t0,
+            davidson_seconds=dav_secs,
+            svd_seconds=svd_secs,
+            env_seconds=env_secs,
+        )
+
+
+@dataclasses.dataclass
+class MultiDMRGResult:
+    energies: np.ndarray                 # [B] final sweep energies
+    sweep_stats: List[MultiSweepStats]
+    engine: MultiProblemEngine
+
+
+def run_dmrg_multi(
+    space,
+    n_sites: int,
+    mpos: Sequence[Sequence[BlockSparseTensor]],
+    bond_schedule: Sequence[int] = (8, 16, 32),
+    sweeps_per_bond: int = 2,
+    cutoff: float = 1e-12,
+    davidson_iters: int = 3,
+    initial_states: Optional[Sequence[int]] = None,
+    dtype=jnp.float64,
+    ops: Optional[StackedOps] = None,
+) -> MultiDMRGResult:
+    """``core.dmrg.run_dmrg`` over B structure-identical problems at once.
+
+    ``mpos`` is one pre-built (compressed) MPO per problem; all must share
+    one structure signature — the scheduler groups requests so this holds,
+    and it is asserted here because a violation would silently corrupt every
+    problem in the batch.  Pass a shared ``ops`` to reuse compiled pipelines
+    across calls (the serving path always does).
+    """
+    sig0 = mpo_structure_signature(mpos[0])
+    for mp in mpos[1:]:
+        if mpo_structure_signature(mp) != sig0:
+            raise ValueError(
+                "run_dmrg_multi: MPO structure mismatch across the batch; "
+                "problems with different block structures cannot share a "
+                "vmapped pipeline (group by mpo_structure_signature first)"
+            )
+    W = [stack_tensors([mp[j] for mp in mpos]) for j in range(n_sites)]
+    states = (
+        list(initial_states) if initial_states is not None
+        else neel_states(space, n_sites)
+    )
+    mps0 = product_state_mps(space, states, dtype=dtype)
+    T = [broadcast_tensor(t, len(mpos)) for t in mps0.tensors]
+    engine = MultiProblemEngine(
+        T, W, ops=ops, davidson_iters=davidson_iters
+    )
+    stats: List[MultiSweepStats] = []
+    for m in bond_schedule:
+        for _ in range(sweeps_per_bond):
+            stats.append(engine.sweep(max_bond=m, cutoff=cutoff))
+    return MultiDMRGResult(
+        energies=stats[-1].energies, sweep_stats=stats, engine=engine
+    )

@@ -1,0 +1,140 @@
+"""Batch scheduler: group requests by plan signature, cut power-of-two slots.
+
+Requests land in per-group FIFO queues (one group per ``problems.group_key``
+— model/size/solver settings + MPO structure).  ``next_batch`` serves the
+group whose head request has waited longest (no starvation) and pads the
+slot to the next power of two by duplicating the tail request, because jax
+keys compiled executables by every leaf shape INCLUDING the batch axis: a
+quantized slot-size set {1, 2, 4, ..., max_batch} means the warmup hook can
+precompile every size a steady-state batch will ever take, and ragged
+arrival counts never retrace.  Filler copies cost compute but not
+correctness — their results are dropped on completion.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import OrderedDict, deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+from ..dist.plan import bucket_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class ProblemSpec:
+    """One DMRG request: model + Hamiltonian parameters + solver settings.
+
+    ``params`` is a sorted tuple of (name, value) pairs (hashable, so specs
+    can key dicts); use ``make`` to build one from kwargs.
+    """
+
+    model: str = "heisenberg"
+    n_sites: int = 8
+    params: Tuple[Tuple[str, float], ...] = ()
+    max_bond: int = 16
+    sweeps_per_bond: int = 2
+    davidson_iters: int = 6
+    cutoff: float = 1e-12
+    mpo_cutoff: float = 1e-13
+
+    @staticmethod
+    def make(model: str = "heisenberg", n_sites: int = 8, **kw) -> "ProblemSpec":
+        solver = {
+            k: kw.pop(k)
+            for k in ("max_bond", "sweeps_per_bond", "davidson_iters",
+                      "cutoff", "mpo_cutoff")
+            if k in kw
+        }
+        return ProblemSpec(
+            model=model,
+            n_sites=n_sites,
+            params=tuple(sorted(kw.items())),
+            **solver,
+        )
+
+    @property
+    def bond_schedule(self) -> Tuple[int, ...]:
+        """Power-of-two ramp 8, 16, ... up to ``max_bond`` (the bucket set
+        the warmup hook precompiles), like the examples drivers use."""
+        out: List[int] = []
+        m = 8
+        while m < self.max_bond:
+            out.append(m)
+            m *= 2
+        out.append(self.max_bond)
+        return tuple(out)
+
+
+@dataclasses.dataclass
+class BatchSlot:
+    """One schedulable batch: real requests + tail-duplicated filler."""
+
+    key: Tuple                       # the group key
+    rids: List[int]                  # request ids, real ones only
+    specs: List[ProblemSpec]         # len == slot_size (fillers appended)
+    mpos: List                       # per-problem MPOs, len == slot_size
+    space: object
+
+    @property
+    def n_real(self) -> int:
+        return len(self.rids)
+
+    @property
+    def slot_size(self) -> int:
+        return len(self.specs)
+
+    @property
+    def fill_ratio(self) -> float:
+        return self.n_real / self.slot_size
+
+
+class BatchScheduler:
+    """Per-group FIFO queues with oldest-head-first slot cutting."""
+
+    def __init__(self, max_batch: int = 8):
+        assert max_batch >= 1
+        self.max_batch = max_batch
+        self._queues: "OrderedDict[Tuple, Deque]" = OrderedDict()
+        self._seq = itertools.count()
+
+    def __len__(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def add(self, key: Tuple, rid: int, spec: ProblemSpec, space, mpo):
+        q = self._queues.get(key)
+        if q is None:
+            q = self._queues[key] = deque()
+        q.append((next(self._seq), rid, spec, space, mpo))
+
+    def oldest_seq(self) -> Optional[int]:
+        """Arrival counter of the longest-waiting request (None if empty)."""
+        heads = [q[0][0] for q in self._queues.values() if q]
+        return min(heads) if heads else None
+
+    def largest_group(self) -> int:
+        return max((len(q) for q in self._queues.values()), default=0)
+
+    def next_batch(self) -> Optional[BatchSlot]:
+        """Cut a slot from the group whose head request is oldest."""
+        best_key, best_seq = None, None
+        for key, q in self._queues.items():
+            if q and (best_seq is None or q[0][0] < best_seq):
+                best_key, best_seq = key, q[0][0]
+        if best_key is None:
+            return None
+        q = self._queues[best_key]
+        taken = [q.popleft() for _ in range(min(self.max_batch, len(q)))]
+        if not q:
+            del self._queues[best_key]
+        rids = [t[1] for t in taken]
+        specs = [t[2] for t in taken]
+        space = taken[0][3]
+        mpos = [t[4] for t in taken]
+        # pad to the power-of-two slot size with tail duplicates so the
+        # compiled pipeline only ever sees the warmed batch-size bucket set
+        slot = bucket_dim(len(taken))
+        while len(specs) < slot:
+            specs.append(specs[-1])
+            mpos.append(mpos[-1])
+        return BatchSlot(key=best_key, rids=rids, specs=specs, mpos=mpos,
+                        space=space)

@@ -1,0 +1,311 @@
+"""Async serving front end: bounded queue, worker thread, stats endpoint.
+
+``DMRGService`` accepts ``ProblemSpec`` requests (``submit`` -> request id),
+solves them in structure-grouped batch slots on a daemon worker thread
+through one shared ``StackedOps`` pipeline, and exposes ``poll`` /
+``result`` plus a structured ``stats`` endpoint (problems/sec, batch fill
+ratio, retraces, plan-cache hit rates, per-stage seconds).
+
+Backpressure: the queue is bounded (``max_queue``); ``submit`` blocks up to
+``timeout`` for a slot and then raises ``ServeQueueFull`` — shedding load at
+admission instead of growing an unbounded backlog.
+
+Warmup: ``warmup(spec, sizes)`` runs one full solve per power-of-two slot
+size OUTSIDE the serving ledger, populating the plan caches and every jitted
+callable (all bond-schedule structures x all slot sizes).  After that,
+steady-state batches replay compiled code only — ``stats()['retraces']``
+counts any (re)trace since the last warmup, and the CLI ``--check`` asserts
+it stays zero.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from typing import Dict, List, Optional, Sequence
+
+from .. import dist
+from .multicore import run_dmrg_multi
+from .problems import build_problem, group_key
+from .scheduler import BatchScheduler, BatchSlot, ProblemSpec
+from .stacked import StackedOps
+
+
+class ServeQueueFull(Exception):
+    """Raised by ``submit`` when the bounded queue stays full past timeout."""
+
+
+# jaxlib < 0.5 can segfault when two threads hit XLA's backend_compile at
+# once.  The worker thread holds this lock for the duration of every batch
+# solve (and warmup); in-process clients that run their OWN jax work while a
+# service is live (e.g. verification solves) should hold it too.  RLock so a
+# client can nest service calls under its own critical section.
+DEVICE_LOCK = threading.RLock()
+
+
+_PENDING, _RUNNING, _DONE, _FAILED = "pending", "running", "done", "failed"
+
+
+class DMRGService:
+    """Batched DMRG serving: submit/poll/result over a worker thread.
+
+    Parameters
+    ----------
+    max_batch: largest slot the scheduler cuts (slots pad to powers of two).
+    max_queue: admission bound — queued-but-unsolved requests beyond this
+        block/reject new submits.
+    batch_wait_s: how long the worker waits for a partial group to fill
+        before cutting an under-full slot (latency/throughput trade).
+    ops: shared ``StackedOps``; pass one to share compiled pipelines across
+        services, default builds its own.
+    start: launch the worker thread (tests set False to drive manually).
+    """
+
+    def __init__(
+        self,
+        max_batch: int = 8,
+        max_queue: int = 64,
+        batch_wait_s: float = 0.05,
+        ops: Optional[StackedOps] = None,
+        start: bool = True,
+    ):
+        self.ops = ops if ops is not None else StackedOps()
+        self.scheduler = BatchScheduler(max_batch)
+        self.max_queue = max_queue
+        self.batch_wait_s = batch_wait_s
+        self._cv = threading.Condition()
+        self._requests: Dict[int, Dict] = {}
+        self._rid = itertools.count()
+        self._stop = False
+        # serving ledger (warmup excluded)
+        self.completed = 0
+        self.failed = 0
+        self.solve_seconds = 0.0
+        self.slots_run = 0
+        self.fill_sum = 0.0
+        self.stage_seconds = {"davidson": 0.0, "svd": 0.0, "env": 0.0}
+        self._retrace_floor = self.ops.retraces
+        self._warmed: set = set()
+        self._worker: Optional[threading.Thread] = None
+        if start:
+            # XLA compilation can overflow the default pthread stack when it
+            # runs on a secondary thread in a large process (LLVM recursion);
+            # give the worker an explicit 64 MiB stack.  Prefer warmup() —
+            # which compiles on the calling thread — so the worker only
+            # replays compiled code.
+            old_stack = threading.stack_size(64 * 1024 * 1024)
+            try:
+                self._worker = threading.Thread(
+                    target=self._worker_loop, name="dmrg-serve", daemon=True
+                )
+                self._worker.start()
+            finally:
+                threading.stack_size(old_stack)
+
+    # ----------------------------------------------------------------- client
+    def submit(self, spec: ProblemSpec, timeout: Optional[float] = None) -> int:
+        """Enqueue a problem; returns a request id.
+
+        Builds the MPO on the calling thread (host-only work; the plan
+        caches it touches are lock-protected), derives the batch group, and
+        admits the request unless the queue is full past ``timeout``.
+        """
+        space, mpo = build_problem(spec)
+        key = group_key(spec, mpo)
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            while len(self.scheduler) >= self.max_queue:
+                remaining = (
+                    None if deadline is None else deadline - time.monotonic()
+                )
+                if remaining is not None and remaining <= 0:
+                    raise ServeQueueFull(
+                        f"queue full ({self.max_queue} pending) after "
+                        f"{timeout}s"
+                    )
+                if not self._cv.wait(timeout=remaining):
+                    raise ServeQueueFull(
+                        f"queue full ({self.max_queue} pending) after "
+                        f"{timeout}s"
+                    )
+            rid = next(self._rid)
+            self._requests[rid] = {
+                "status": _PENDING,
+                "spec": spec,
+                "submitted": time.monotonic(),
+            }
+            self.scheduler.add(key, rid, spec, space, mpo)
+            self._cv.notify_all()
+        return rid
+
+    def poll(self, rid: int) -> Dict:
+        """Non-blocking status: {status, and result fields once done}."""
+        with self._cv:
+            req = self._requests.get(rid)
+            if req is None:
+                raise KeyError(f"unknown request id {rid}")
+            return dict(req)
+
+    def result(self, rid: int, timeout: Optional[float] = None) -> Dict:
+        """Block until ``rid`` completes; returns the result record."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            while True:
+                req = self._requests.get(rid)
+                if req is None:
+                    raise KeyError(f"unknown request id {rid}")
+                if req["status"] == _DONE:
+                    return dict(req)
+                if req["status"] == _FAILED:
+                    raise RuntimeError(f"request {rid} failed: {req['error']}")
+                remaining = (
+                    None if deadline is None else deadline - time.monotonic()
+                )
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError(f"request {rid} not done after {timeout}s")
+                self._cv.wait(timeout=remaining)
+
+    # ----------------------------------------------------------------- warmup
+    def warmup(self, spec: ProblemSpec, sizes: Sequence[int] = (1, 2, 4, 8)):
+        """Precompile the full pipeline for ``spec``'s group at each slot size.
+
+        Runs one complete solve per size with ``size`` copies of ``spec`` —
+        covering every bond-schedule structure at every power-of-two batch
+        size the scheduler can cut — outside the serving ledger.  After this,
+        requests in the group replay compiled code only.
+        """
+        space, mpo = build_problem(spec)
+        sizes = sorted({s for s in sizes if s <= max(
+            1, self.scheduler.max_batch)})
+        for size in sizes:
+            with DEVICE_LOCK:
+                run_dmrg_multi(
+                    space,
+                    spec.n_sites,
+                    [mpo] * size,
+                    bond_schedule=spec.bond_schedule,
+                    sweeps_per_bond=spec.sweeps_per_bond,
+                    cutoff=spec.cutoff,
+                    davidson_iters=spec.davidson_iters,
+                    ops=self.ops,
+                )
+        with self._cv:
+            self._warmed.add((group_key(spec, mpo), tuple(sizes)))
+            self._retrace_floor = self.ops.retraces
+
+    # ----------------------------------------------------------------- worker
+    def _worker_loop(self):
+        while True:
+            with self._cv:
+                while not self._stop:
+                    oldest = self.scheduler.oldest_seq()
+                    if oldest is None:
+                        self._cv.wait()
+                        continue
+                    # cut immediately once a full slot is available; give a
+                    # partial group batch_wait_s to fill before running ragged
+                    if self.scheduler.largest_group() >= self.scheduler.max_batch:
+                        break
+                    first = self._requests[
+                        min(
+                            (r for r, q in self._requests.items()
+                             if q["status"] == _PENDING),
+                            key=lambda r: self._requests[r]["submitted"],
+                        )
+                    ]
+                    wait = self.batch_wait_s - (
+                        time.monotonic() - first["submitted"]
+                    )
+                    if wait <= 0:
+                        break
+                    self._cv.wait(timeout=wait)
+                if self._stop:
+                    return
+                slot = self.scheduler.next_batch()
+                if slot is None:
+                    continue
+                for rid in slot.rids:
+                    self._requests[rid]["status"] = _RUNNING
+                self._cv.notify_all()  # queue drained below max -> admit more
+            self._run_slot(slot)
+
+    def _run_slot(self, slot: BatchSlot):
+        spec = slot.specs[0]
+        t0 = time.perf_counter()
+        try:
+            with DEVICE_LOCK:
+                res = run_dmrg_multi(
+                    slot.space,
+                    spec.n_sites,
+                    slot.mpos,
+                    bond_schedule=spec.bond_schedule,
+                    sweeps_per_bond=spec.sweeps_per_bond,
+                    cutoff=spec.cutoff,
+                    davidson_iters=spec.davidson_iters,
+                    ops=self.ops,
+                )
+        except Exception as exc:  # surface the failure on every request
+            with self._cv:
+                self.failed += len(slot.rids)
+                for rid in slot.rids:
+                    self._requests[rid].update(status=_FAILED, error=repr(exc))
+                self._cv.notify_all()
+            return
+        dt = time.perf_counter() - t0
+        last = res.sweep_stats[-1]
+        with self._cv:
+            self.completed += len(slot.rids)
+            self.solve_seconds += dt
+            self.slots_run += 1
+            self.fill_sum += slot.fill_ratio
+            for st in res.sweep_stats:
+                self.stage_seconds["davidson"] += st.davidson_seconds
+                self.stage_seconds["svd"] += st.svd_seconds
+                self.stage_seconds["env"] += st.env_seconds
+            for b, rid in enumerate(slot.rids):  # fillers beyond rids dropped
+                self._requests[rid].update(
+                    status=_DONE,
+                    energy=float(res.energies[b]),
+                    max_bond=int(last.max_bond),
+                    trunc_err=float(last.trunc_err[b]),
+                    n_sweeps=len(res.sweep_stats),
+                    batch_size=slot.slot_size,
+                )
+            self._cv.notify_all()
+
+    # ------------------------------------------------------------------ stats
+    def stats(self) -> Dict:
+        """Structured serving stats (the ``--stats-json`` payload).
+
+        ``retraces`` counts pipeline (re)traces since the last warmup — the
+        steady-state number a warmed group must keep at zero.  Plan-cache
+        hit rates come from ``repro.dist.cache_stats`` (the three global
+        caches are shared with any in-process single-problem runs).
+        """
+        with self._cv:
+            return {
+                "completed": self.completed,
+                "failed": self.failed,
+                "pending": len(self.scheduler),
+                "solve_seconds": self.solve_seconds,
+                "problems_per_sec": (
+                    self.completed / self.solve_seconds
+                    if self.solve_seconds > 0 else 0.0
+                ),
+                "slots": self.slots_run,
+                "batch_fill_ratio": (
+                    self.fill_sum / self.slots_run if self.slots_run else 0.0
+                ),
+                "retraces": self.ops.retraces - self._retrace_floor,
+                "retraces_total": self.ops.retraces,
+                "warmed_groups": len(self._warmed),
+                "stage_seconds": dict(self.stage_seconds),
+                "plan_caches": dist.cache_stats(self.ops.engine),
+            }
+
+    def shutdown(self):
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        if self._worker is not None:
+            self._worker.join(timeout=10)
