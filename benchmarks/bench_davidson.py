@@ -23,9 +23,9 @@ def run(ms=(16, 32, 64)):
         def mv(x):
             return matvec_two_site(A, Wj, Wj1, B, x)
 
-        lam, x = davidson(mv, theta, n_iter=2)  # warmup
+        lam, x, _ = davidson(mv, theta, n_iter=2)  # warmup
         t0 = time.perf_counter()
-        lam, x = davidson(mv, theta, n_iter=2)
+        lam, x, _ = davidson(mv, theta, n_iter=2)
         jax.block_until_ready(list(x.blocks.values()))
         dt = time.perf_counter() - t0
         rows.append((f"davidson_m{m}", dt * 1e6, f"lambda={lam:.6f}"))

@@ -288,6 +288,20 @@ def _bench(n=16, m=32, quick=False):
     rec["batched_svd_retraces"] = eng.contract_fn.decomp.jit_retraces
     rec["batched_env_retraces"] = eng.contract_fn.env.jit_retraces
     rec["batched_env_stats"] = eng.contract_fn.stats()["env"]
+    # robustness ledger: no faults are armed here, so the degradation
+    # ladder must stay untouched — any nonzero counter means a backend
+    # silently failed and fell back, which would skew every timing above
+    st_b = eng.contract_fn.stats()
+    rec["recovery_ledger"] = {
+        "engine_retries": dict(st_b["retries"]),
+        "engine_degradations": dict(st_b["degradations"]),
+        "decomp_retries": st_b["decomp"]["retries"],
+        "decomp_degradations": dict(st_b["decomp"]["degradations"]),
+    }
+    assert not any(st_b["retries"].values()), rec["recovery_ledger"]
+    assert not any(st_b["degradations"].values()), rec["recovery_ledger"]
+    assert st_b["decomp"]["retries"] == 0, rec["recovery_ledger"]
+    assert not any(st_b["decomp"]["degradations"].values()), rec["recovery_ledger"]
     rec["batched_speedup"] = t_plan / max(t_b, 1e-12)
     rec["batched_energy_diff"] = abs(e_b - e_plan)
     # fused-vs-eager env stage inside full sweeps (the microbench below

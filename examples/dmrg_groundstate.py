@@ -48,6 +48,12 @@ def main(argv=None):
     ap.add_argument("--stats-json", metavar="PATH",
                     help="write run stats + global plan-cache counters as "
                          "JSON ('-' = stdout)")
+    ap.add_argument("--checkpoint-dir", metavar="DIR",
+                    help="persist sweep checkpoints here and resume from "
+                         "the newest one on restart (README Robustness)")
+    ap.add_argument("--checkpoint-every", type=int, default=1,
+                    help="site updates between mid-sweep checkpoints "
+                         "(sweep boundaries always checkpoint)")
     args = ap.parse_args(argv)
     if args.algo.endswith("_unplanned") and (args.shard or args.jit_matvec):
         ap.error("--shard/--jit-matvec require an engine algo, "
@@ -82,7 +88,9 @@ def main(argv=None):
                    jit_matvec=args.jit_matvec, shard_policy=shard_policy,
                    svd_method=args.svd_method,
                    jit_env=False if args.no_jit_env
-                   or args.algo.endswith("_unplanned") else None)
+                   or args.algo.endswith("_unplanned") else None,
+                   checkpoint_dir=args.checkpoint_dir,
+                   checkpoint_every=args.checkpoint_every)
     print(f"\nground-state energy estimate: {res.energy:.10f}")
     print(f"energy per site:              {res.energy / n:.10f}")
 

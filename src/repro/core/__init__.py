@@ -1,5 +1,6 @@
 """DMRG core: the paper's primary contribution, on the block-sparse substrate."""
-from .davidson import davidson
+from .checkpoint import CheckpointManager, pack_run_state, tensor_restore, tensor_state
+from .davidson import DavidsonInfo, davidson
 from .dmrg import DMRGResult, run_dmrg
 from .ed import build_dense_hamiltonian, ground_energy
 from .env import expectation, get_contractor, matvec_two_site
@@ -10,6 +11,8 @@ from .siteops import electron_space, spin_half_space
 from .sweep import DMRGEngine
 
 __all__ = [
+    "CheckpointManager", "pack_run_state", "tensor_restore", "tensor_state",
+    "DavidsonInfo",
     "davidson", "DMRGResult", "run_dmrg", "build_dense_hamiltonian",
     "ground_energy", "expectation", "get_contractor", "matvec_two_site",
     "electron_system", "spin_system", "build_mpo", "compress_mpo",

@@ -21,12 +21,15 @@ branch as ulp-stable as the seed implementation.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..dist import faults
+from ..dist.faults import NumericalHealthError
 from ..tensor.blocksparse import BlockSparseTensor
 
 # Shared numerical thresholds — the batched multi-problem mirror
@@ -34,6 +37,26 @@ from ..tensor.blocksparse import BlockSparseTensor
 # imports these instead of re-stating the literals.
 GRAM_NOISE_FLOOR = 1e-12   # scale factor for the Gram-identity noise floor
 GS_BREAKDOWN_TOL = 1e-12   # Gram-Schmidt breakdown threshold factor
+
+
+@dataclasses.dataclass
+class DavidsonInfo:
+    """Health record of one Davidson solve (no more silent break-outs).
+
+    ``converged``: the residual norm dropped below ``tol`` before the
+    iteration budget ran out.  Production sweeps with small ``n_iter``
+    typically stop on the budget without ever measuring the final residual,
+    so ``converged=False`` there means "unknown", not "diverged" — the
+    interesting counters are ``restarts`` (Gram-Schmidt breakdowns answered
+    with a seeded random restart) and ``exhausted`` (the restart ALSO broke
+    down: the Krylov subspace is exhausted and the solve accepted the
+    current Ritz pair early, which the seed implementation did silently).
+    """
+
+    converged: bool = False
+    iterations: int = 0
+    restarts: int = 0
+    exhausted: bool = False
 
 
 def _new_columns(V, AV, i) -> np.ndarray:
@@ -49,15 +72,30 @@ def davidson(
     n_iter: int = 2,
     tol: float = 1e-10,
     seed: int = 0,
-) -> Tuple[float, BlockSparseTensor]:
-    """Return (smallest eigenvalue, eigenvector approximation)."""
+) -> Tuple[float, BlockSparseTensor, DavidsonInfo]:
+    """Return (smallest eigenvalue, eigenvector approximation, health info).
+
+    Health guard: the Rayleigh-Ritz column read is the solve's one existing
+    host sync per iteration — a non-finite entry there (a NaN-poisoned
+    matvec, an overflowed contraction) would otherwise propagate silently
+    into the eigh and out through the MPS, so it raises
+    ``NumericalHealthError(stage="davidson")`` at zero extra sync cost.
+    """
+    info = DavidsonInfo()
+    # injected non-convergence: suppress the residual break so the solve
+    # runs its full budget and honestly reports converged=False
+    force_no_converge = faults.fire("davidson.no_converge") is not None
     nrm = x0.norm()
     x = x0.scale(1.0 / nrm)
     V = [x]
     AV = [matvec(x)]
     if n_iter <= 0:
         lam = float(np.real(np.asarray(V[0].inner(AV[0]))))
-        return lam, x
+        if not np.isfinite(lam):
+            raise NumericalHealthError(
+                "non-finite Rayleigh quotient", stage="davidson"
+            )
+        return lam, x, info
 
     dim = n_iter + 1
     M = np.zeros((dim, dim))  # <v_j | A v_i>
@@ -66,6 +104,12 @@ def davidson(
 
     for i in range(n_iter):
         cols = _new_columns(V, AV, i)
+        if not np.isfinite(cols).all():
+            raise NumericalHealthError(
+                f"non-finite Rayleigh-Ritz entries at iteration {i}",
+                stage="davidson",
+            )
+        info.iterations = i + 1
         M[: i + 1, i] = M[i, : i + 1] = cols[: i + 1]
         W[: i + 1, i] = W[i, : i + 1] = cols[i + 1 :]
         evals, evecs = np.linalg.eigh(M[: i + 1, : i + 1])
@@ -91,7 +135,8 @@ def davidson(
             qn = float(np.sqrt(qn2_gram))
         else:
             qn = float(np.asarray(q.norm()))
-        if qn < tol:
+        if qn < tol and not force_no_converge:
+            info.converged = True
             break
 
         # modified Gram-Schmidt vs all v_j, randomize on breakdown (paper)
@@ -103,6 +148,7 @@ def davidson(
             # bucket-padded matvec (dist/batch.py) the new direction stays
             # in the invariant unpadded subspace instead of acquiring O(1)
             # weight in the padded rows where the operator is zero
+            info.restarts += 1
             q = matvec(BlockSparseTensor.random(
                 x.indices, x.charge, jax.random.PRNGKey(seed + i), dtype=x.dtype
             ))
@@ -110,9 +156,10 @@ def davidson(
                 q = q - V[j].scale(V[j].inner(q))
             qn2 = float(np.asarray(q.norm()))
             if qn2 < GS_BREAKDOWN_TOL * max(qn, 1.0):
+                info.exhausted = True
                 break  # subspace exhausted; accept the current Ritz pair
         q = q.scale(1.0 / qn2)
         V.append(q)
         AV.append(matvec(q))
 
-    return lam, x.scale(1.0 / x.norm())
+    return lam, x.scale(1.0 / x.norm()), info

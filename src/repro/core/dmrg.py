@@ -11,6 +11,12 @@ from typing import List, Optional, Sequence
 import jax.numpy as jnp
 
 from ..dist.shard import BlockShardPolicy
+from .checkpoint import (
+    CheckpointManager,
+    pack_run_state,
+    tensor_restore,
+    unpack_envs,
+)
 from .mpo import build_mpo, compress_mpo
 from .mps import MPS, neel_states, product_state_mps
 from .siteops import LocalSpace
@@ -47,7 +53,19 @@ def run_dmrg(
     svd_method: Optional[str] = None,
     jit_env: Optional[bool] = None,
     mpo=None,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 1,
+    checkpoint_keep: int = 2,
 ) -> DMRGResult:
+    """Ground-state DMRG over a bond-dimension schedule.
+
+    With ``checkpoint_dir`` set, the full sweep state (MPS, both env lists,
+    schedule position, partial in-sweep accumulators, Davidson seed) is
+    pickled atomically every ``checkpoint_every`` site updates plus at every
+    sweep boundary, and a rerun with the same arguments resumes from the
+    newest checkpoint — mid-sweep if that is where it died — with energies
+    identical to the uninterrupted run (core/checkpoint.py).
+    """
     # A pre-built MPO bypasses build/compress so callers comparing against a
     # batched multi-problem run (repro/serve) optimize the EXACT same
     # operator, not a re-compressed cousin with reordered degenerate blocks.
@@ -57,6 +75,28 @@ def run_dmrg(
             mpo = compress_mpo(mpo, cutoff=mpo_cutoff)
     states = list(initial_states) if initial_states is not None else neel_states(space, n_sites)
     mps = product_state_mps(space, states, dtype=dtype)
+
+    ckpt = (
+        CheckpointManager(
+            checkpoint_dir, every=checkpoint_every, keep=checkpoint_keep
+        )
+        if checkpoint_dir is not None
+        else None
+    )
+    state = ckpt.load_latest() if ckpt is not None else None
+    restored_envs = None
+    stats: List[SweepStats] = []
+    step = 0
+    start_bi = start_si = 0
+    sweep_resume = None
+    if state is not None:
+        mps.tensors = [tensor_restore(s) for s in state["mps"]]
+        restored_envs = unpack_envs(state)
+        stats = [SweepStats(**d) for d in state["stats"]]
+        step = int(state["step"])
+        start_bi, start_si = int(state["bond_idx"]), int(state["sweep_idx"])
+        sweep_resume = state["sweep_resume"]
+
     engine = DMRGEngine(
         mps,
         mpo,
@@ -67,13 +107,53 @@ def run_dmrg(
         shard_policy=shard_policy,
         svd_method=svd_method,
         jit_env=jit_env,
+        restored_envs=restored_envs,
     )
+    if state is not None:
+        engine.seed = int(state["seed"])
 
-    stats: List[SweepStats] = []
-    for m in bond_schedule:
-        for _ in range(sweeps_per_bond):
-            s = engine.sweep(max_bond=m, cutoff=cutoff)
+    def _snapshot(bi: int, si: int, resume_state):
+        return pack_run_state(
+            step=step,
+            bond_idx=bi,
+            sweep_idx=si,
+            sweep_resume=resume_state,
+            mps_tensors=engine.mps.tensors,
+            left_envs=engine.left_envs,
+            right_envs=engine.right_envs,
+            stats=stats,
+            seed=engine.seed,
+        )
+
+    for bi, m in enumerate(bond_schedule):
+        if bi < start_bi:
+            continue
+        for si in range(sweeps_per_bond):
+            if bi == start_bi and si < start_si:
+                continue
+            resume = (
+                sweep_resume if (bi, si) == (start_bi, start_si) else None
+            )
+            on_site = None
+            if ckpt is not None:
+
+                def on_site(rs, _bi=bi, _si=si):
+                    nonlocal step
+                    step += 1
+                    if rs is not None:  # sweep boundary saved below instead
+                        ckpt.maybe_save(_snapshot(_bi, _si, rs))
+
+            s = engine.sweep(
+                max_bond=m, cutoff=cutoff, resume=resume, on_site=on_site
+            )
             stats.append(s)
+            if ckpt is not None:
+                # boundary checkpoint points at the NEXT schedule slot, so a
+                # crash between sweeps resumes cleanly at the next sweep
+                nbi, nsi = (
+                    (bi, si + 1) if si + 1 < sweeps_per_bond else (bi + 1, 0)
+                )
+                ckpt.save(_snapshot(nbi, nsi, None))
             if verbose:
                 print(
                     f"m={m:6d} E={s.energy:+.10f} maxbond={s.max_bond} "

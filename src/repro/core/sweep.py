@@ -31,10 +31,12 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, List, Optional
+from typing import Callable, Dict, List, Optional
 
+from ..dist import faults
 from ..dist.batch import pad_block_sparse, unpad_block_sparse
 from ..dist.engine import ContractionEngine
+from ..dist.faults import FaultInjected, NumericalHealthError
 from ..dist.shard import BlockShardPolicy
 from ..tensor.blocksparse import (
     BlockSparseTensor,
@@ -73,6 +75,21 @@ class SweepStats:
     # seed three-contraction path otherwise.  Host-side dispatch time (jax
     # is async), like the contraction engine's ``backend_seconds``.
     env_seconds: float = 0.0
+    # Davidson health ledger for the sweep (core/davidson.py DavidsonInfo):
+    # solves run, solves whose residual actually converged below tol (budget-
+    # limited production solves stop early, so converged < solves is normal),
+    # total inner iterations, Gram-Schmidt breakdown restarts, and subspace
+    # exhaustions.  Restarts/exhaustions > 0 on a healthy small problem is
+    # expected near convergence; they become interesting when they spike.
+    davidson_solves: int = 0
+    davidson_converged: int = 0
+    davidson_iterations: int = 0
+    davidson_restarts: int = 0
+    davidson_exhausted: int = 0
+    # pair optimizations that failed the fast path (NumericalHealthError /
+    # injected fault) and were recovered on the seed ladder rung.  Zero on a
+    # healthy run — the clean bench leg asserts it.
+    pair_retries: int = 0
 
 
 class DMRGEngine:
@@ -91,6 +108,7 @@ class DMRGEngine:
         engine: Optional[Callable] = None,
         svd_method: Optional[str] = None,
         jit_env: Optional[bool] = None,
+        restored_envs=None,
     ):
         assert mps.n_sites == len(mpo)
         self.mps = mps
@@ -164,7 +182,18 @@ class DMRGEngine:
         self.davidson_iters = davidson_iters
         self.seed = seed
         self.n = mps.n_sites
-        self._init_envs()
+        if restored_envs is not None:
+            # checkpoint resume (core/checkpoint.py): the serialized env
+            # lists are exact copies of the live ones at save time, so
+            # restoring them — rather than recomputing via _init_envs —
+            # keeps a mid-sweep resume bit-identical to the uninterrupted
+            # run (the right envs mid-LR-sweep are partially stale, a state
+            # a fresh rebuild could not reproduce)
+            self.left_envs, self.right_envs = restored_envs
+            assert len(self.left_envs) == self.n + 1
+            assert len(self.right_envs) == self.n + 1
+        else:
+            self._init_envs()
 
     def _init_envs(self):
         n = self.n
@@ -187,18 +216,29 @@ class DMRGEngine:
         """
         A, T, W = self.left_envs[j], self.mps.tensors[j], self.mpo[j]
         if self.jit_env:
-            return self.contract_fn.env_update_left(
-                A, T, W, mpo_padded=self._padded_mpo(j)
-            )
+            try:
+                return self.contract_fn.env_update_left(
+                    A, T, W, mpo_padded=self._padded_mpo(j)
+                )
+            except Exception:
+                # degradation ladder (DESIGN.md 3.8): fused core failed —
+                # recover on the seed three-contraction path, which matches
+                # it to <1e-10 block-for-block, and keep sweeping
+                self.contract_fn.note_retry("env")
+                self.contract_fn.note_degradation("env_seed")
         return extend_left(A, T, W, self.contract_fn)
 
     def _extend_right_env(self, j: int) -> BlockSparseTensor:
         """B_j from B_{j+1}: absorb site j+1 into the right environment."""
         B, T, W = self.right_envs[j + 1], self.mps.tensors[j + 1], self.mpo[j + 1]
         if self.jit_env:
-            return self.contract_fn.env_update_right(
-                B, T, W, mpo_padded=self._padded_mpo(j + 1)
-            )
+            try:
+                return self.contract_fn.env_update_right(
+                    B, T, W, mpo_padded=self._padded_mpo(j + 1)
+                )
+            except Exception:
+                self.contract_fn.note_retry("env")
+                self.contract_fn.note_degradation("env_seed")
         return extend_right(B, T, W, self.contract_fn)
 
     def _padded_mpo(self, j: int) -> BlockSparseTensor:
@@ -211,6 +251,59 @@ class DMRGEngine:
         return t if self.shard_policy is None else self.shard_policy.place(t)
 
     def _optimize_pair(self, j: int, max_bond: int, cutoff: float, absorb: str):
+        """Optimize pair (j, j+1), recovering failures on the seed rung.
+
+        The fast path is the full engine pipeline (planned matvec, batched
+        SVD).  A ``NumericalHealthError`` (a health guard at a host sync saw
+        non-finite values — e.g. a NaN-poisoned GEMM surfacing at the
+        Davidson Rayleigh-Ritz read) or an injected fault aborts the pair
+        BEFORE any MPS tensor is written, so the retry starts from exactly
+        the pre-pair state and re-runs on the seed code path: eager seed
+        ``contract`` matvec, seed per-sector SVD, no engine involvement —
+        immune to any engine-layer fault still armed.  Seed-equality
+        guarantees (<1e-10) make the recovered energy match a clean run.
+        """
+        try:
+            return self._optimize_pair_fast(j, max_bond, cutoff, absorb)
+        except (NumericalHealthError, FaultInjected):
+            if isinstance(self.contract_fn, ContractionEngine):
+                self.contract_fn.note_retry("pair")
+                self.contract_fn.note_degradation("pair_seed")
+            return self._optimize_pair_seed(j, max_bond, cutoff, absorb)
+
+    def _optimize_pair_seed(
+        self, j: int, max_bond: int, cutoff: float, absorb: str
+    ):
+        """Bottom degradation rung: the pair on seed-only code paths."""
+        T, W = self.mps.tensors, self.mpo
+        A, B = self.left_envs[j], self.right_envs[j + 1]
+        Tj, Tj1, Wj, Wj1 = T[j], T[j + 1], W[j], W[j + 1]
+        if self.shard_policy is not None:
+            # the seed contract is eager per-block; gather sharded operands
+            # first (same rule as the engine's storage-mode gather)
+            rep = self.shard_policy.replicated
+            A, B = rep(A), rep(B)
+            Tj, Tj1, Wj, Wj1 = rep(Tj), rep(Tj1), rep(Wj), rep(Wj1)
+        theta = contract(Tj, Tj1, ((2,), (0,)))
+
+        def mv(x):
+            return matvec_two_site(A, Wj, Wj1, B, x, contract)
+
+        lam, theta, info = davidson(
+            mv, theta, n_iter=self.davidson_iters, seed=self.seed + j
+        )
+        t_svd = time.perf_counter()
+        U, V, _, err = svd_split_unplanned(
+            theta, 2, max_bond=max_bond, cutoff=cutoff, absorb=absorb
+        )
+        svd_dt = time.perf_counter() - t_svd
+        T[j] = self._place(flip_flow(U, 2))
+        T[j + 1] = self._place(flip_flow(V, 0))
+        return lam, err, svd_dt, info
+
+    def _optimize_pair_fast(
+        self, j: int, max_bond: int, cutoff: float, absorb: str
+    ):
         T, W = self.mps.tensors, self.mpo
         A, B = self.left_envs[j], self.right_envs[j + 1]
         theta = self.contract_fn(T[j], T[j + 1], ((2,), (0,)))
@@ -238,7 +331,7 @@ class DMRGEngine:
             def mv(x):
                 return matvec_two_site(A, Wjp, Wj1p, B, x, self.contract_fn)
 
-        lam, theta = davidson(
+        lam, theta, dinfo = davidson(
             mv, theta, n_iter=self.davidson_iters, seed=self.seed + j
         )
         if pad:
@@ -258,47 +351,115 @@ class DMRGEngine:
         svd_dt = time.perf_counter() - t_svd
         T[j] = self._place(flip_flow(U, 2))
         T[j + 1] = self._place(flip_flow(V, 0))
-        return lam, err, svd_dt
+        return lam, err, svd_dt, dinfo
 
-    def sweep(self, max_bond: int, cutoff: float = 1e-12) -> SweepStats:
-        """One full left-to-right + right-to-left sweep; returns stats."""
-        T, W = self.mps.tensors, self.mpo
+    def sweep(
+        self,
+        max_bond: int,
+        cutoff: float = 1e-12,
+        resume: Optional[Dict] = None,
+        on_site: Optional[Callable[[Optional[Dict]], None]] = None,
+    ) -> SweepStats:
+        """One full left-to-right + right-to-left sweep; returns stats.
+
+        ``resume`` restarts mid-sweep from a state dict previously handed to
+        ``on_site`` (phase, next site, partial accumulators) — together with
+        restored MPS/env lists this continues an interrupted sweep with
+        energies identical to the uninterrupted run (core/checkpoint.py).
+        ``on_site(state)`` fires after every completed site update (pair
+        optimization + env extension) with the resume state that would
+        restart right after it, or ``None`` when the sweep just finished.
+        The ``sweep.kill`` fault point fires after ``on_site`` — a test can
+        checkpoint site k and die before site k+1, like a real crash.
+        """
         n = self.n
-        energies, site_secs = [], []
-        max_err = 0.0
-        svd_secs = 0.0
-        env_secs = 0.0
+        r = resume or {}
+        energies: List[float] = list(r.get("energies", []))
+        site_secs: List[float] = list(r.get("site_seconds", []))
+        max_err = float(r.get("max_err", 0.0))
+        svd_secs = float(r.get("svd_seconds", 0.0))
+        env_secs = float(r.get("env_seconds", 0.0))
+        secs_base = float(r.get("seconds", 0.0))
+        dav = dict(r.get("davidson", {}))
+        pair_retries = int(r.get("pair_retries", 0))
+        phase = r.get("phase", "LR")
+        start_j = int(r.get("j", 0 if phase == "LR" else n - 2))
         t0 = time.perf_counter()
 
-        for j in range(n - 1):  # left -> right
+        def _site(j: int, absorb: str):
+            nonlocal max_err, svd_secs, env_secs, pair_retries
             ts = time.perf_counter()
-            lam, err, svd_dt = self._optimize_pair(j, max_bond, cutoff, absorb="right")
+            before = 0
+            if isinstance(self.contract_fn, ContractionEngine):
+                before = self.contract_fn.retries.get("pair", 0)
+            lam, err, svd_dt, dinfo = self._optimize_pair(
+                j, max_bond, cutoff, absorb=absorb
+            )
+            if isinstance(self.contract_fn, ContractionEngine):
+                pair_retries += self.contract_fn.retries.get("pair", 0) - before
             te = time.perf_counter()
-            self.left_envs[j + 1] = self._place(self._extend_left_env(j))
+            if absorb == "right":
+                self.left_envs[j + 1] = self._place(self._extend_left_env(j))
+            else:
+                self.right_envs[j] = self._place(self._extend_right_env(j))
             env_secs += time.perf_counter() - te
             energies.append(lam)
             site_secs.append(time.perf_counter() - ts)
             max_err = max(max_err, err)
             svd_secs += svd_dt
+            dav["solves"] = dav.get("solves", 0) + 1
+            dav["converged"] = dav.get("converged", 0) + int(dinfo.converged)
+            dav["iterations"] = dav.get("iterations", 0) + dinfo.iterations
+            dav["restarts"] = dav.get("restarts", 0) + dinfo.restarts
+            dav["exhausted"] = dav.get("exhausted", 0) + int(dinfo.exhausted)
 
-        for j in range(n - 2, -1, -1):  # right -> left
-            ts = time.perf_counter()
-            lam, err, svd_dt = self._optimize_pair(j, max_bond, cutoff, absorb="left")
-            te = time.perf_counter()
-            self.right_envs[j] = self._place(self._extend_right_env(j))
-            env_secs += time.perf_counter() - te
-            energies.append(lam)
-            site_secs.append(time.perf_counter() - ts)
-            max_err = max(max_err, err)
-            svd_secs += svd_dt
+        def _after_site(state: Optional[Dict]):
+            if on_site is not None:
+                if state is not None:
+                    state.update(
+                        energies=list(energies),
+                        site_seconds=list(site_secs),
+                        max_err=max_err,
+                        svd_seconds=svd_secs,
+                        env_seconds=env_secs,
+                        seconds=secs_base + time.perf_counter() - t0,
+                        davidson=dict(dav),
+                        pair_retries=pair_retries,
+                    )
+                on_site(state)
+            if faults.fire("sweep.kill") is not None:
+                raise FaultInjected(
+                    "sweep.kill", "sweep killed after a site update"
+                )
+
+        if phase == "LR":
+            for j in range(start_j, n - 1):  # left -> right
+                _site(j, "right")
+                nxt = (
+                    {"phase": "LR", "j": j + 1}
+                    if j + 1 < n - 1
+                    else {"phase": "RL", "j": n - 2}
+                )
+                _after_site(nxt)
+            start_j = n - 2
+
+        for j in range(start_j, -1, -1):  # right -> left
+            _site(j, "left")
+            _after_site({"phase": "RL", "j": j - 1} if j > 0 else None)
 
         return SweepStats(
             energy=energies[-1],
             max_bond=self.mps.max_bond(),
             trunc_err=max_err,
-            seconds=time.perf_counter() - t0,
+            seconds=secs_base + time.perf_counter() - t0,
             site_seconds=site_secs,
             site_energies=energies,
             svd_seconds=svd_secs,
             env_seconds=env_secs,
+            davidson_solves=dav.get("solves", 0),
+            davidson_converged=dav.get("converged", 0),
+            davidson_iterations=dav.get("iterations", 0),
+            davidson_restarts=dav.get("restarts", 0),
+            davidson_exhausted=dav.get("exhausted", 0),
+            pair_retries=pair_retries,
         )

@@ -23,6 +23,10 @@ execution:
               jitted core per padded structure: the three chained
               contractions of ``extend_left``/``extend_right`` with no host
               round-trips between them.
+- ``faults``: deterministic fault injection — named injection points armed
+              via ``inject(...)`` / ``REPRO_FAULTS`` — plus the
+              ``NumericalHealthError`` the health guards raise (DESIGN.md
+              Sec. 3.8).
 - ``engine``: ``ContractionEngine`` — executes plans through a pluggable
               list / dense / csr / batched backend chosen by a
               flop-and-dispatch cost model, jits the planned two-site
@@ -37,6 +41,14 @@ from .batch import pad_block_sparse, unpad_block_sparse
 from .decomp import DecompositionEngine, svd_split_planned
 from .engine import ContractionEngine
 from .envcore import EnvironmentEngine
+from .faults import (
+    FAULT_POINTS,
+    FaultInjected,
+    FaultRegistry,
+    NumericalHealthError,
+    inject,
+    registry as fault_registry,
+)
 from .plan import (
     ContractionPlan,
     DecompPlanCache,
@@ -91,6 +103,12 @@ __all__ = [
     "global_decomp_cache",
     "global_env_cache",
     "cache_stats",
+    "FAULT_POINTS",
+    "FaultInjected",
+    "FaultRegistry",
+    "NumericalHealthError",
+    "inject",
+    "fault_registry",
     "svd_split_planned",
     "BlockShardPolicy",
     "make_block_mesh",

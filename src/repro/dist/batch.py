@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from ..kernels.block_gemm.ops import block_sparse_matmul
 from ..tensor.blocksparse import BlockKey, BlockSparseTensor
 from ..tensor.qn import Index
+from . import faults
 from .plan import ContractionPlan, bucket_dim
 
 BlockMats = Dict[BlockKey, jax.Array]
@@ -179,6 +180,12 @@ def execute_batched(
             piece = out[slot]
             prev = out_acc.get(kc)
             out_acc[kc] = piece if prev is None else prev + piece
+    # fault point: NaN-poison one bucket's output, simulating a bad GEMM on
+    # a flaky node.  Never under tracing — a trace-time NaN would be baked
+    # into a compiled executable cached far beyond the fault's lifetime.
+    if not tracing and faults.fire("batch.gemm_nan") is not None:
+        k0 = next(iter(out_acc))
+        out_acc[k0] = jnp.full_like(out_acc[k0], jnp.nan)
     out_blocks = {
         kc: mat.reshape(plan.out_block_shape(kc)) for kc, mat in out_acc.items()
     }

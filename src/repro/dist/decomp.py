@@ -51,7 +51,9 @@ import numpy as np
 
 from ..tensor.blocksparse import BlockSparseTensor
 from ..tensor.qn import IN, Index, OUT, qzero
+from . import faults
 from .batch import is_tracing as _is_tracing
+from .faults import FaultInjected, NumericalHealthError
 from .plan import (
     DecompPlanCache,
     DecompositionPlan,
@@ -280,6 +282,12 @@ class DecompositionEngine:
         self.sectors_processed = 0
         self.buckets_processed = 0
         self.rsvd_buckets = 0
+        # degradation ladder ledger (DESIGN.md 3.8): ``retries`` counts
+        # splits whose first attempt failed; ``degradations`` counts which
+        # ladder rung recovered them.  Both stay zero on a healthy run —
+        # the bench gate asserts it.
+        self.retries = 0
+        self.degradations = {"svd_exact": 0, "svd_unplanned": 0}
 
     # ------------------------------------------------------------ cost model
     def _bucket_methods(
@@ -379,6 +387,15 @@ class DecompositionEngine:
         (a host float) is the sum of the squared discarded singular values —
         equal to the squared Frobenius reconstruction error
         ``||theta - U·V||²`` when ``absorb`` is "left" or "right".
+
+        Robustness (DESIGN.md 3.8): a failed attempt — an exception out of
+        the batched SVD core (LAPACK non-convergence, an injected
+        ``decomp.svd_fail``) or non-finite singular values at the host sync
+        — retries down the documented ladder: randomized → exact batched SVD
+        → the seed per-sector loop (``svd_split_unplanned``).  Each rung is
+        counted in ``stats()['retries']`` / ``['degradations']``; if the
+        final rung still yields non-finite values the input itself is
+        poisoned and ``NumericalHealthError`` propagates to the caller.
         """
         if _is_tracing(theta):
             raise TypeError(
@@ -386,8 +403,54 @@ class DecompositionEngine:
                 "singular values to host, so it cannot run under jit tracing"
             )
         t0 = time.perf_counter()
-        plan = self.cache.get(theta, n_row_modes)
-        methods, sketch = self._bucket_methods(plan, int(max_bond))
+        try:
+            plan = self.cache.get(theta, n_row_modes)
+            methods, sketch = self._bucket_methods(plan, int(max_bond))
+            try:
+                f = faults.fire("decomp.svd_fail")
+                if f is not None:
+                    raise FaultInjected("decomp.svd_fail",
+                                        "batched SVD did not converge")
+                return self._execute_planned(
+                    plan, theta, max_bond, cutoff, absorb, methods, sketch
+                )
+            except Exception:
+                self.retries += 1
+                if "rsvd" in methods:
+                    # ladder rung 1: drop the randomized sketch, retry exact
+                    self.degradations["svd_exact"] += 1
+                    try:
+                        return self._execute_planned(
+                            plan, theta, max_bond, cutoff, absorb,
+                            ("svd",) * plan.num_buckets, sketch,
+                        )
+                    except Exception:
+                        pass
+                # ladder rung 2 (final): the seed per-sector loop
+                self.degradations["svd_unplanned"] += 1
+                from ..tensor.blocksparse import svd_split_unplanned
+
+                U_t, V_t, svals, trunc_err = svd_split_unplanned(
+                    theta, n_row_modes, max_bond, cutoff=cutoff, absorb=absorb
+                )
+                s_all = np.concatenate(
+                    [np.asarray(jax.device_get(s)).ravel()
+                     for s in svals.values()]
+                ) if svals else np.zeros(0)
+                if not np.isfinite(s_all).all():
+                    raise NumericalHealthError(
+                        "non-finite singular values even on the seed path: "
+                        "the decomposition input is poisoned",
+                        stage="svd",
+                    )
+                return U_t, V_t, svals, trunc_err
+        finally:
+            self.svd_seconds += time.perf_counter() - t0
+
+    def _execute_planned(
+        self, plan, theta, max_bond, cutoff, absorb, methods, sketch
+    ):
+        """One planned attempt: core exec + the single sync + slicing."""
         key = (
             absorb if absorb in ("left", "right") else "none",
             methods,
@@ -408,8 +471,16 @@ class DecompositionEngine:
         self.buckets_processed += plan.num_buckets
         self.rsvd_buckets += sum(1 for m in methods if m == "rsvd")
 
-        # ---- the one host sync: all singular values, already masked
+        # ---- the one host sync: all singular values, already masked.  The
+        # numerical-health guard rides this existing sync (zero extra device
+        # round-trips): non-finite values here mean the SVD input or the
+        # decomposition itself went bad, and must not reach the MPS.
         s_host = np.asarray(jax.device_get(s_cat))
+        if not np.isfinite(s_host).all():
+            raise NumericalHealthError(
+                "non-finite singular values at the truncation sync",
+                stage="svd",
+            )
         k_out = [int(out[1].shape[-1]) for out in bucket_out]
         # global truncation, deterministic tie-break (sector, position)
         m_q, trunc_err = host_truncate(plan, s_host, k_out, max_bond, cutoff)
@@ -453,7 +524,6 @@ class DecompositionEngine:
             {(sector_index[q],) + ck: b for (q, ck), b in v_blocks.items()},
             theta.charge,
         )
-        self.svd_seconds += time.perf_counter() - t0
         return U_t, V_t, svals, trunc_err
 
     # ------------------------------------------------------------- reporting
@@ -479,6 +549,10 @@ class DecompositionEngine:
           and shape buckets executed (buckets ≤ sectors; the gap is the
           batching win).
         - ``rsvd_buckets``: buckets routed to the randomized path.
+        - ``retries`` / ``degradations``: failed first attempts and the
+          ladder rung that recovered them ("svd_exact": randomized dropped
+          for exact, "svd_unplanned": fell back to the seed per-sector
+          loop).  Zero on a healthy run (the bench gate asserts this).
         """
         return {
             "plan_cache": self.cache.stats(),
@@ -489,6 +563,8 @@ class DecompositionEngine:
             "sectors": self.sectors_processed,
             "buckets": self.buckets_processed,
             "rsvd_buckets": self.rsvd_buckets,
+            "retries": self.retries,
+            "degradations": dict(self.degradations),
         }
 
 

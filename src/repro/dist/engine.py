@@ -35,7 +35,7 @@ import jax.numpy as jnp
 
 from ..kernels.block_gemm.ops import block_sparse_matmul
 from ..tensor.block_csr import pack_blocks
-from ..tensor.blocksparse import BlockKey, BlockSparseTensor
+from ..tensor.blocksparse import BlockKey, BlockSparseTensor, contract
 from .batch import (
     execute_batched,
     execute_pairs,
@@ -53,6 +53,12 @@ from .shard import BlockShardPolicy
 # on small DMRG blocks the per-op dispatch dominates, which is exactly why the
 # paper's dense algorithm wins at small m (their Fig. 5 crossover).
 PAIR_OVERHEAD_FLOPS = 16384.0
+
+# Degradation ladder for a failed contraction backend (DESIGN.md 3.8): on an
+# exception the engine retries each rung BELOW the failed one in this order,
+# ending at the seed ``tensor.blocksparse.contract``.  Ordered fastest/most
+# specialized first, so a failure costs the least capable machinery it can.
+CONTRACTION_LADDER: Tuple[str, ...] = ("csr", "batched", "dense", "list")
 
 
 class ContractionEngine:
@@ -101,6 +107,22 @@ class ContractionEngine:
         self.backend_seconds: Dict[str, float] = {k: 0.0 for k in zero}
         self.jit_retraces = 0
         self._jit_mv = None
+        # degradation ladder ledger (DESIGN.md 3.8): stage-keyed counts of
+        # failed first attempts and which lower rung recovered them.  Shared
+        # with the sweep layer via note_retry/note_degradation so one
+        # stats() call reports the whole run's recovery history.
+        self.retries: Dict[str, int] = {}
+        self.degradations: Dict[str, int] = {}
+
+    # ------------------------------------------------------ health bookkeeping
+    def note_retry(self, stage: str) -> None:
+        """Record a failed first attempt at ``stage`` (sweep layers call this
+        so per-run recovery counts live on the engine the run owns)."""
+        self.retries[stage] = self.retries.get(stage, 0) + 1
+
+    def note_degradation(self, stage: str) -> None:
+        """Record that ``stage`` recovered on a lower ladder rung."""
+        self.degradations[stage] = self.degradations.get(stage, 0) + 1
 
     # ----------------------------------------------------------------- entry
     def __call__(
@@ -123,10 +145,17 @@ class ContractionEngine:
         ):
             a, b = self.policy.replicated(a), self.policy.replicated(b)
         t0 = time.perf_counter()
-        if backend == "batched":
-            out = self._execute_batched(plan, a, b, a_mats=a_mats, b_mats=b_mats)
-        else:
-            out = getattr(self, f"_execute_{backend}")(plan, a, b)
+        try:
+            if backend == "batched":
+                out = self._execute_batched(
+                    plan, a, b, a_mats=a_mats, b_mats=b_mats
+                )
+            else:
+                out = getattr(self, f"_execute_{backend}")(plan, a, b)
+        except Exception:
+            if _is_tracing(a) or _is_tracing(b):
+                raise  # mid-trace failure: the caller's eager fallback recovers
+            out = self._degraded_call(backend, plan, a, b, axes)
         self.backend_seconds[backend] += time.perf_counter() - t0
         # spmd mode constrains output layout; storage mode leaves compute
         # results replicated — the sweep re-places what it actually stores
@@ -167,6 +196,42 @@ class ContractionEngine:
         if backend == "csr":
             return plan.flops_csr if plan.num_pairs else 0.0
         return plan.flops_list  # list and batched execute the exact pair flops
+
+    # ---------------------------------------------------- degradation ladder
+    def _degraded_call(
+        self,
+        failed: str,
+        plan: ContractionPlan,
+        a: BlockSparseTensor,
+        b: BlockSparseTensor,
+        axes: Axes,
+    ) -> BlockSparseTensor:
+        """Retry a failed backend down ``CONTRACTION_LADDER`` to the seed.
+
+        Every rung computes the same charge-conserving contraction (the
+        backend-equality guarantee), so recovery changes wall time, never
+        values.  The final rung is the seed ``tensor.blocksparse.contract``
+        — plan-free, engine-free, the code path the whole dist layer is
+        tested against.  Only reached eagerly; mid-trace failures re-raise.
+        """
+        self.note_retry("contraction")
+        start = (
+            CONTRACTION_LADDER.index(failed) + 1
+            if failed in CONTRACTION_LADDER
+            else 0
+        )
+        for rung in CONTRACTION_LADDER[start:]:
+            if rung == "csr" and not self.allow_csr:
+                continue
+            try:
+                out = getattr(self, f"_execute_{rung}")(plan, a, b)
+            except Exception:
+                continue
+            self.note_degradation(f"contraction_{rung}")
+            return out
+        out = contract(a, b, axes)
+        self.note_degradation("contraction_seed")
+        return out
 
     # -------------------------------------------------------------- backends
     def _execute_list(
@@ -410,6 +475,12 @@ class ContractionEngine:
         retraces; see ``EnvironmentEngine.stats``) — together with the
         contraction counters they give the per-stage split that
         ``benchmarks/bench_dist.py`` reports.
+
+        ``retries`` / ``degradations`` are the degradation-ladder ledger
+        (DESIGN.md 3.8): stage-keyed counts of failed first attempts and the
+        ladder rung that recovered them (e.g. ``contraction_list``,
+        ``env_seed``, ``pair_seed``).  Both empty on a healthy run — the
+        clean tier-1 bench leg asserts exactly that.
         """
         return {
             "plan_cache": self.cache.stats(),
@@ -417,6 +488,8 @@ class ContractionEngine:
             "backend_flops": dict(self.backend_flops),
             "backend_seconds": dict(self.backend_seconds),
             "jit_retraces": self.jit_retraces,
+            "retries": dict(self.retries),
+            "degradations": dict(self.degradations),
             "decomp": self.decomp.stats(),
             "env": self.env.stats(),
         }

@@ -45,7 +45,9 @@ import jax.numpy as jnp
 
 from ..tensor.blocksparse import BlockSparseTensor
 from ..tensor.qn import Index
+from . import faults
 from .batch import execute_pairs, pad_block_sparse, unpad_block_sparse
+from .faults import FaultInjected
 from .plan import (
     EnvPlanCache,
     EnvironmentPlan,
@@ -165,6 +167,11 @@ class EnvironmentEngine:
         return self._update("right", B, T, W, mpo_padded)
 
     def _update(self, side, env, T, W, mpo_padded=None):
+        # fault point: exception out of the fused env core, standing in for
+        # a compilation/launch failure of the jitted program.  Raised before
+        # any work so the caller's seed-extend fallback sees a clean slate.
+        if faults.fire("env.exception") is not None:
+            raise FaultInjected("env.exception", "fused env core failed")
         t0 = time.perf_counter()
         if self.pad:
             # the MPO is immutable for a run, so callers (the sweep) may pass

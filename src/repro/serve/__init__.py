@@ -19,6 +19,7 @@ Three layers:
   stats endpoint — exposed as ``python -m repro.serve``.
 """
 from .multicore import (
+    MultiDavidsonInfo,
     MultiDMRGResult,
     MultiProblemEngine,
     davidson_multi,
@@ -27,7 +28,7 @@ from .multicore import (
     svd_split_multi,
 )
 from .problems import MODEL_BUILDERS, build_problem, group_key
-from .scheduler import BatchScheduler, BatchSlot, ProblemSpec
+from .scheduler import BatchScheduler, BatchSlot, ProblemSpec, make_slot
 from .service import DEVICE_LOCK, DMRGService, ServeQueueFull
 from .stacked import StackedOps, broadcast_tensor, stack_tensors, unstack_tensor
 
@@ -37,6 +38,7 @@ __all__ = [
     "DEVICE_LOCK",
     "DMRGService",
     "MODEL_BUILDERS",
+    "MultiDavidsonInfo",
     "MultiDMRGResult",
     "MultiProblemEngine",
     "ProblemSpec",
@@ -46,6 +48,7 @@ __all__ = [
     "build_problem",
     "davidson_multi",
     "group_key",
+    "make_slot",
     "mpo_structure_signature",
     "run_dmrg_multi",
     "stack_tensors",

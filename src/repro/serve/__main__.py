@@ -83,8 +83,12 @@ def main(argv=None) -> int:
                     help="skip precompilation (first batches will retrace)")
     ap.add_argument("--stats-json", metavar="PATH",
                     help="write service + plan-cache stats as JSON ('-' = stdout)")
+    ap.add_argument("--checkpoint-dir", metavar="DIR",
+                    help="journal undelivered requests here; a restarted "
+                         "service with the same dir re-enqueues them")
     ap.add_argument("--check", action="store_true",
-                    help="verify vs per-problem solves and zero retraces")
+                    help="verify vs per-problem solves, zero retraces, and "
+                         "a zero recovery ledger (no retries/bisections)")
     args = ap.parse_args(argv)
 
     from repro.core import run_dmrg
@@ -104,7 +108,8 @@ def main(argv=None) -> int:
         for params in grid
     ]
 
-    svc = DMRGService(max_batch=args.batch, max_queue=args.queue)
+    svc = DMRGService(max_batch=args.batch, max_queue=args.queue,
+                      checkpoint_dir=args.checkpoint_dir)
     try:
         if not args.no_warmup:
             sizes = [s for s in (1, 2, 4, 8, 16, 32, 64) if s <= args.batch]
@@ -179,6 +184,15 @@ def main(argv=None) -> int:
                     file=sys.stderr,
                 )
                 return 1
+            # with no faults armed, a clean sweep must never touch the
+            # recovery machinery
+            if not stats["faults"]["armed"]:
+                ledger = {k: stats[k] for k in
+                          ("retries", "bisections", "worker_restarts")}
+                if any(ledger.values()):
+                    print(f"CHECK FAILED: nonzero recovery ledger {ledger}",
+                          file=sys.stderr)
+                    return 1
             print("CHECK OK")
         return 0
     finally:

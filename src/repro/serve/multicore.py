@@ -33,7 +33,9 @@ import numpy as np
 from ..core.davidson import GRAM_NOISE_FLOOR, GS_BREAKDOWN_TOL
 from ..core.env import left_edge, right_edge
 from ..core.mps import neel_states, product_state_mps
+from ..dist import faults
 from ..dist.decomp import _cache_exec, host_truncate, svd_core_body
+from ..dist.faults import FaultInjected, NumericalHealthError
 from ..dist.plan import global_decomp_cache
 from ..tensor.blocksparse import BlockSparseTensor, flip_flow
 from ..tensor.qn import IN, Index, OUT, qzero
@@ -65,11 +67,43 @@ def mpo_structure_signature(mpo: Sequence[BlockSparseTensor]) -> Tuple:
 
 
 # ------------------------------------------------------------------ Davidson
+@dataclasses.dataclass
+class MultiDavidsonInfo:
+    """Health record of one batched Davidson solve (``DavidsonInfo`` mirror).
+
+    ``converged`` is a per-problem [B] bool array — as in the single solver,
+    False on a budget-limited production solve means "unknown", not
+    "diverged".  ``restarts`` counts Gram-Schmidt breakdown events (batch
+    restarts are issued for all broken-down problems at once).
+    """
+
+    converged: np.ndarray
+    iterations: int = 0
+    restarts: int = 0
+
+
 def _new_columns_multi(V, AV, i) -> np.ndarray:
     """M[:, j, i] and W[:, j, i] for j <= i, one device round-trip: [2(i+1), B]."""
     vals = [binner(V[j], AV[i]) for j in range(i + 1)]
     vals += [binner(AV[j], AV[i]) for j in range(i + 1)]
     return np.real(np.asarray(jax.device_get(jnp.stack(vals))))
+
+
+def _check_cols_multi(cols: np.ndarray, i: int) -> None:
+    """Per-problem health guard on the one existing sync per iteration.
+
+    ``cols`` is [2(i+1), B]; vmap keeps problems independent, so a column
+    that is non-finite pinpoints exactly the poisoned problems — the mask
+    lets the serving layer fail those requests and retry the rest.
+    """
+    bad = ~np.isfinite(cols).all(axis=0)
+    if bad.any():
+        raise NumericalHealthError(
+            f"non-finite Rayleigh-Ritz entries at iteration {i} for "
+            f"problems {np.flatnonzero(bad).tolist()}",
+            stage="davidson",
+            problems=bad,
+        )
 
 
 def davidson_multi(
@@ -78,7 +112,7 @@ def davidson_multi(
     n_iter: int = 2,
     tol: float = 1e-10,
     seed: int = 0,
-) -> Tuple[np.ndarray, BlockSparseTensor]:
+) -> Tuple[np.ndarray, BlockSparseTensor, MultiDavidsonInfo]:
     """Batched ``core.davidson.davidson``: per-problem eigenpairs, shared syncs.
 
     The subspace vectors are stacked, so each problem spans its OWN Krylov
@@ -88,15 +122,28 @@ def davidson_multi(
     breakdown threshold and same seeded restart — except that a converged
     problem keeps riding along (its recorded Ritz data frozen, its residual
     column near zero) until the whole batch finishes.  Returns
-    ``(eigenvalues [B], stacked eigenvector approximation)``.
+    ``(eigenvalues [B], stacked eigenvector approximation, health info)``.
+
+    Health guard: the Rayleigh-Ritz column read is checked per problem
+    (``_check_cols_multi``) at zero extra sync cost; a NaN-poisoned problem
+    raises ``NumericalHealthError`` carrying the [B] mask of exactly the
+    poisoned batch positions.
     """
     B = batch_size(x0)
+    force_no_converge = faults.fire("davidson.no_converge") is not None
     x = bscale(x0, 1.0 / bnorm(x0))
     V = [x]
     AV = [matvec(x)]
     if n_iter <= 0:
         lam = np.real(np.asarray(jax.device_get(binner(V[0], AV[0]))))
-        return lam, x
+        bad = ~np.isfinite(lam)
+        if bad.any():
+            raise NumericalHealthError(
+                "non-finite Rayleigh quotient",
+                stage="davidson",
+                problems=bad,
+            )
+        return lam, x, MultiDavidsonInfo(converged=np.zeros(B, dtype=bool))
 
     dim = n_iter + 1
     M = np.zeros((B, dim, dim))  # <v_j | A v_i> per problem
@@ -105,9 +152,12 @@ def davidson_multi(
     keep_s[:, 0] = 1.0
     keep_lam = np.zeros(B)
     done = np.zeros(B, dtype=bool)
+    info = MultiDavidsonInfo(converged=np.zeros(B, dtype=bool))
 
     for i in range(n_iter):
         cols = _new_columns_multi(V, AV, i)
+        _check_cols_multi(cols, i)
+        info.iterations = i + 1
         M[:, : i + 1, i] = M[:, i, : i + 1] = cols[: i + 1].T
         W[:, : i + 1, i] = W[:, i, : i + 1] = cols[i + 1 :].T
         evals, evecs = np.linalg.eigh(M[:, : i + 1, : i + 1])
@@ -132,7 +182,8 @@ def davidson_multi(
         if need_exact.any():
             qn_exact = np.asarray(jax.device_get(bnorm(q)))
             qn = np.where(need_exact, qn_exact, qn)
-        done = done | (act & (qn < tol))
+        if not force_no_converge:
+            done = done | (act & (qn < tol))
         if done.all():
             break
 
@@ -142,6 +193,7 @@ def davidson_multi(
         qn2 = np.asarray(jax.device_get(bnorm(q)))
         breakdown = (~done) & (qn2 < GS_BREAKDOWN_TOL * np.maximum(qn, 1.0))
         if breakdown.any():
+            info.restarts += 1
             # restart with A·(random), confined to range(A) like the single
             # solver; the same PRNG key on the same structure gives the same
             # restart vector a padded single run would draw
@@ -167,7 +219,8 @@ def davidson_multi(
         AV.append(matvec(q))
 
     x = blincomb(V, keep_s[:, : len(V)])
-    return keep_lam.copy(), bscale(x, 1.0 / bnorm(x))
+    info.converged = done.copy()
+    return keep_lam.copy(), bscale(x, 1.0 / bnorm(x)), info
 
 
 # ----------------------------------------------------------------- SVD split
@@ -221,6 +274,13 @@ def svd_split_multi(
     ``(U, V, svals_by_sector [B, m], trunc_err [B])``; problem b's retained
     values are the first ``m_q[b]`` entries of each sector, zeros beyond.
     """
+    # fault point: forced failure of the stacked SVD core, standing in for
+    # LAPACK non-convergence.  No per-problem mask — the whole core call
+    # fails — so the serving layer recovers by slot bisection, not masking.
+    if faults.fire("decomp.svd_fail") is not None:
+        raise FaultInjected(
+            "decomp.svd_fail", "stacked batched SVD did not converge"
+        )
     plan = global_decomp_cache.get(theta, n_row_modes)
     methods = ("svd",) * plan.num_buckets
     absorb_key = absorb if absorb in ("left", "right") else "none"
@@ -234,6 +294,16 @@ def svd_split_multi(
 
     # ---- the one host sync: all B problems' masked singular values
     s_host = np.asarray(jax.device_get(s_cat))  # [B, total]
+    # per-problem health guard on the existing sync (vmap keeps problems
+    # independent, so a non-finite row pinpoints the poisoned ones)
+    bad = ~np.isfinite(s_host).all(axis=1)
+    if bad.any():
+        raise NumericalHealthError(
+            f"non-finite singular values for problems "
+            f"{np.flatnonzero(bad).tolist()}",
+            stage="svd",
+            problems=bad,
+        )
     B = s_host.shape[0]
     k_out = [int(out[1].shape[-1]) for out in bucket_out]
     m_qs = np.zeros((B, plan.num_sectors), np.int64)
@@ -312,6 +382,14 @@ class MultiSweepStats:
     davidson_seconds: float = 0.0
     svd_seconds: float = 0.0
     env_seconds: float = 0.0
+    # Davidson health ledger (MultiDavidsonInfo, summed over the sweep):
+    # solves run, per-problem residual convergences (converged < solves is
+    # normal for budget-limited production solves), total inner iterations,
+    # and Gram-Schmidt breakdown restart events
+    davidson_solves: int = 0
+    davidson_converged: Optional[np.ndarray] = None   # [B] counts
+    davidson_iterations: int = 0
+    davidson_restarts: int = 0
 
 
 class MultiProblemEngine:
@@ -374,7 +452,7 @@ class MultiProblemEngine:
         theta_p = pad_stacked(theta)
         mv = self.ops.matvec_fn(A, self._padded_mpo(j), self._padded_mpo(j + 1), Bx)
         t_dav = time.perf_counter()
-        lam, theta_p = davidson_multi(
+        lam, theta_p, dinfo = davidson_multi(
             mv, theta_p, n_iter=self.davidson_iters, seed=self.seed + j
         )
         dav_dt = time.perf_counter() - t_dav
@@ -387,7 +465,7 @@ class MultiProblemEngine:
         svd_dt = time.perf_counter() - t_svd
         T[j] = flip_flow(U, 2)
         T[j + 1] = flip_flow(V, 0)
-        return lam, errs, dav_dt, svd_dt
+        return lam, errs, dav_dt, svd_dt, dinfo
 
     def sweep(self, max_bond: int, cutoff: float = 1e-12) -> MultiSweepStats:
         """One full left-to-right + right-to-left sweep over the batch."""
@@ -395,10 +473,19 @@ class MultiProblemEngine:
         energies = None
         max_err = np.zeros(self.B)
         dav_secs = svd_secs = env_secs = 0.0
+        solves = iters = restarts = 0
+        converged = np.zeros(self.B, dtype=np.int64)
         t0 = time.perf_counter()
 
+        def _absorb_info(dinfo: MultiDavidsonInfo):
+            nonlocal solves, iters, restarts, converged
+            solves += 1
+            iters += dinfo.iterations
+            restarts += dinfo.restarts
+            converged = converged + dinfo.converged.astype(np.int64)
+
         for j in range(n - 1):  # left -> right
-            lam, errs, dav_dt, svd_dt = self._optimize_pair(
+            lam, errs, dav_dt, svd_dt, dinfo = self._optimize_pair(
                 j, max_bond, cutoff, absorb="right"
             )
             te = time.perf_counter()
@@ -410,9 +497,10 @@ class MultiProblemEngine:
             max_err = np.maximum(max_err, errs)
             dav_secs += dav_dt
             svd_secs += svd_dt
+            _absorb_info(dinfo)
 
         for j in range(n - 2, -1, -1):  # right -> left
-            lam, errs, dav_dt, svd_dt = self._optimize_pair(
+            lam, errs, dav_dt, svd_dt, dinfo = self._optimize_pair(
                 j, max_bond, cutoff, absorb="left"
             )
             te = time.perf_counter()
@@ -424,6 +512,7 @@ class MultiProblemEngine:
             max_err = np.maximum(max_err, errs)
             dav_secs += dav_dt
             svd_secs += svd_dt
+            _absorb_info(dinfo)
 
         return MultiSweepStats(
             energies=energies,
@@ -433,6 +522,10 @@ class MultiProblemEngine:
             davidson_seconds=dav_secs,
             svd_seconds=svd_secs,
             env_seconds=env_secs,
+            davidson_solves=solves,
+            davidson_converged=converged,
+            davidson_iterations=iters,
+            davidson_restarts=restarts,
         )
 
 

@@ -64,6 +64,20 @@ class ProblemSpec:
         out.append(self.max_bond)
         return tuple(out)
 
+    # ------------------------------------------------------- journal (JSON)
+    def to_json_dict(self) -> Dict:
+        """Plain-JSON form, for the service's crash-recovery journal."""
+        d = dataclasses.asdict(self)
+        d["params"] = [[k, v] for k, v in self.params]
+        return d
+
+    @staticmethod
+    def from_json_dict(d: Dict) -> "ProblemSpec":
+        """Inverse of ``to_json_dict`` (JSON lists back to hashable tuples)."""
+        d = dict(d)
+        d["params"] = tuple((k, v) for k, v in d.get("params", ()))
+        return ProblemSpec(**d)
+
 
 @dataclasses.dataclass
 class BatchSlot:
@@ -87,6 +101,33 @@ class BatchSlot:
     def fill_ratio(self) -> float:
         return self.n_real / self.slot_size
 
+    def rid_at(self, b: int) -> int:
+        """The request id batch position ``b`` belongs to.
+
+        Filler positions (``b >= n_real``) are tail duplicates, so a
+        per-problem failure mask flagging a filler implicates the tail
+        request — its real copy shares the filler's values exactly.
+        """
+        return self.rids[b] if b < self.n_real else self.rids[-1]
+
+
+def make_slot(key, rids, specs, space, mpos) -> BatchSlot:
+    """Build a slot from real requests, padding to the power-of-two size.
+
+    The same tail-duplication rule ``BatchScheduler.next_batch`` uses —
+    shared so the service's bisection-retry slots land on the identical
+    warmed batch-size buckets as scheduler-cut ones.
+    """
+    assert len(rids) == len(specs) == len(mpos) and rids
+    specs, mpos = list(specs), list(mpos)
+    slot = bucket_dim(len(rids))
+    while len(specs) < slot:
+        specs.append(specs[-1])
+        mpos.append(mpos[-1])
+    return BatchSlot(
+        key=key, rids=list(rids), specs=specs, mpos=mpos, space=space
+    )
+
 
 class BatchScheduler:
     """Per-group FIFO queues with oldest-head-first slot cutting."""
@@ -105,6 +146,17 @@ class BatchScheduler:
         if q is None:
             q = self._queues[key] = deque()
         q.append((next(self._seq), rid, spec, space, mpo))
+
+    def remove(self, rid: int) -> bool:
+        """Drop a queued request (cancellation); False if not queued."""
+        for key, q in list(self._queues.items()):
+            for item in q:
+                if item[1] == rid:
+                    q.remove(item)
+                    if not q:
+                        del self._queues[key]
+                    return True
+        return False
 
     def oldest_seq(self) -> Optional[int]:
         """Arrival counter of the longest-waiting request (None if empty)."""

@@ -28,6 +28,28 @@ except ModuleNotFoundError:
     _install_hypothesis_stub()
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _release_compiled_executables():
+    """Drop jit caches between test modules to bound the process's mmap count.
+
+    Every compiled XLA executable holds several live mmaps and the default
+    ``vm.max_map_count`` is 65530; a full-suite run accumulates enough
+    compiled executables to cross that ceiling, at which point the NEXT
+    compilation segfaults inside jaxlib (observed deterministically once the
+    suite grew past ~200 tests: /proc/<pid>/maps hits ~65k right before the
+    crash).  Clearing per module keeps each module's within-module caching
+    behavior (retrace-counter tests warm up and assert inside one module)
+    while releasing executables no later test can reach.
+    """
+    yield
+    import gc
+
+    import jax
+
+    jax.clear_caches()
+    gc.collect()
+
+
 def pytest_collection_modifyitems(config, items):
     """Skip ``x64``-marked tests when jax runs in float32.
 

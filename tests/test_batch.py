@@ -264,7 +264,7 @@ class TestBatchedSubspaceDavidson:
 
         x0 = BlockSparseTensor.random([ix], key=jax.random.PRNGKey(7))
         # with 8 iterations the subspace spans the whole 8-dim space
-        lam, x = davidson(mv, x0, n_iter=8, tol=1e-12)
+        lam, x, info = davidson(mv, x0, n_iter=8, tol=1e-12)
         evals = np.linalg.eigvalsh(np.asarray(H_sym.to_dense()))
         assert abs(lam - evals[0]) < 1e-8
         # returned vector is normalized and satisfies the eigen equation
@@ -280,7 +280,7 @@ class TestBatchedSubspaceDavidson:
             return contract(H, x, ((1,), (0,)))
 
         x0 = BlockSparseTensor.random([ix], key=jax.random.PRNGKey(3))
-        lam, x = davidson(mv, x0, n_iter=0)
+        lam, x, _ = davidson(mv, x0, n_iter=0)
         xn = x0.scale(1.0 / x0.norm())
         want = float(np.real(np.asarray(xn.inner(mv(xn)))))
         assert abs(lam - want) < 1e-12

@@ -306,9 +306,10 @@ class TestService:
         assert "SERVE_E2E_OK" in proc.stdout
 
     @pytest.mark.x64
-    def test_failed_slot_surfaces_on_requests(self):
-        """A slot whose problems turn out incompatible fails every request in
-        it (rather than hanging result())."""
+    def test_failed_slot_bisects_and_recovers(self):
+        """A slot whose problems turn out incompatible no longer fails (or
+        hangs) every request in it: the unmasked failure bisects the slot
+        and each half solves clean on its own."""
         svc = DMRGService(max_batch=2, start=False)
         s_chain = ProblemSpec.make("heisenberg", 6, J=1.0, h=0.3)
         s_ladder = ProblemSpec.make("j1j2_ladder", 6, J1=1.0, J2=0.5)
@@ -319,12 +320,18 @@ class TestService:
             for rid, (sp, mpo) in enumerate(
                 [(s_chain, mpo_a), (s_ladder, mpo_b)]
             ):
-                svc._requests[rid] = {"status": "pending", "spec": sp,
-                                      "submitted": 0.0}
+                svc._requests[rid] = {"status": "running", "spec": sp,
+                                      "submitted": 0.0, "retries": 0,
+                                      "space": space, "mpo": mpo,
+                                      "key": ("forced",)}
                 svc.scheduler.add(("forced",), rid, sp, space, mpo)
         slot = svc.scheduler.next_batch()
         svc._run_slot(slot)
-        with pytest.raises(RuntimeError, match="failed"):
-            svc.result(0, timeout=1.0)
-        assert svc.stats()["failed"] == 2
+        r0 = svc.result(0, timeout=1.0)
+        r1 = svc.result(1, timeout=1.0)
+        assert r0["status"] == "done" and r1["status"] == "done"
+        st = svc.stats()
+        assert st["bisections"] == 1
+        assert st["completed"] == 2
+        assert st["failed"] == 0
         svc.shutdown()
