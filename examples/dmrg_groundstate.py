@@ -54,6 +54,10 @@ def main(argv=None):
     ap.add_argument("--checkpoint-every", type=int, default=1,
                     help="site updates between mid-sweep checkpoints "
                          "(sweep boundaries always checkpoint)")
+    ap.add_argument("--plan-store", metavar="DIR",
+                    help="persistent plan + executable store (README Cold "
+                         "start): a primed store takes the first sweep from "
+                         "~20x steady-state cost to ~2x; a cold run primes it")
     args = ap.parse_args(argv)
     if args.algo.endswith("_unplanned") and (args.shard or args.jit_matvec):
         ap.error("--shard/--jit-matvec require an engine algo, "
@@ -90,7 +94,8 @@ def main(argv=None):
                    jit_env=False if args.no_jit_env
                    or args.algo.endswith("_unplanned") else None,
                    checkpoint_dir=args.checkpoint_dir,
-                   checkpoint_every=args.checkpoint_every)
+                   checkpoint_every=args.checkpoint_every,
+                   plan_store=args.plan_store)
     print(f"\nground-state energy estimate: {res.energy:.10f}")
     print(f"energy per site:              {res.energy / n:.10f}")
 

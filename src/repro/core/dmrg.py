@@ -5,11 +5,13 @@ over all sites multiple times for each successive bond dimension choice."
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import List, Optional, Sequence
 
 import jax.numpy as jnp
 
+from ..dist import persist
 from ..dist.shard import BlockShardPolicy
 from .checkpoint import (
     CheckpointManager,
@@ -56,6 +58,7 @@ def run_dmrg(
     checkpoint_dir: Optional[str] = None,
     checkpoint_every: int = 1,
     checkpoint_keep: int = 2,
+    plan_store=None,
 ) -> DMRGResult:
     """Ground-state DMRG over a bond-dimension schedule.
 
@@ -65,7 +68,34 @@ def run_dmrg(
     sweep boundary, and a rerun with the same arguments resumes from the
     newest checkpoint — mid-sweep if that is where it died — with energies
     identical to the uninterrupted run (core/checkpoint.py).
+
+    ``plan_store`` (a ``repro.dist.PlanStore`` or a path) activates the
+    persistent plan + executable store for the duration of the run
+    (``dist/persist.py``, DESIGN.md Sec. 3.9): plans, exported cores and
+    compiled executables are loaded from — and written back to — the store,
+    so a primed store takes the first sweep from ~20x steady-state cost to
+    ~2x.  Physics is unchanged: primed and cold runs produce energies equal
+    to <1e-10 (tests/test_persist.py).  A store already activated
+    process-wide (``repro.dist.activate_store``) is used without passing it
+    here; this argument scopes one to a single run.
     """
+    with contextlib.ExitStack() as stack:
+        if plan_store is not None:
+            stack.enter_context(persist.using_store(plan_store))
+        return _run_dmrg_body(
+            space, terms, n_sites, bond_schedule, sweeps_per_bond, cutoff,
+            algo, davidson_iters, mpo_cutoff, initial_states, dtype, verbose,
+            jit_matvec, pad_matvec, shard_policy, svd_method, jit_env, mpo,
+            checkpoint_dir, checkpoint_every, checkpoint_keep,
+        )
+
+
+def _run_dmrg_body(
+    space, terms, n_sites, bond_schedule, sweeps_per_bond, cutoff, algo,
+    davidson_iters, mpo_cutoff, initial_states, dtype, verbose, jit_matvec,
+    pad_matvec, shard_policy, svd_method, jit_env, mpo, checkpoint_dir,
+    checkpoint_every, checkpoint_keep,
+) -> DMRGResult:
     # A pre-built MPO bypasses build/compress so callers comparing against a
     # batched multi-problem run (repro/serve) optimize the EXACT same
     # operator, not a re-compressed cousin with reordered degenerate blocks.

@@ -8,6 +8,11 @@ execution:
               ``DecompositionPlan`` — sector grouping, row/col layouts and
               the gather tables of the blockwise SVD — each derived once per
               block structure and cached by structural signature.
+- ``persist``: ``PlanStore`` — versioned on-disk persistence for the three
+              plan caches, the JAX persistent compilation cache and
+              ``jax.export``ed bucket cores, so a fresh process's first
+              sweep skips the plan/trace/compile pipeline (DESIGN.md
+              Sec. 3.9).
 - ``shard``:  ``BlockShardPolicy`` — places each block's row/column modes on
               mesh axes (the paper's "every block over all processors"
               layout), with divisibility-aware fallback to replication.
@@ -49,6 +54,18 @@ from .faults import (
     inject,
     registry as fault_registry,
 )
+from .persist import (
+    PERSIST_VERSION,
+    PlanStore,
+    activate_store,
+    active_store,
+    canonical_signature,
+    deactivate_store,
+    enable_compilation_cache,
+    signature_digest,
+    store_stats,
+    using_store,
+)
 from .plan import (
     ContractionPlan,
     DecompPlanCache,
@@ -74,12 +91,15 @@ def cache_stats(*engines) -> dict:
     the example drivers dump this; keys are stable so dashboards can diff
     runs.  ``engines`` may be ``ContractionEngine`` instances (anything with
     a ``stats()`` method); their ledgers land under ``"engines"`` in call
-    order.
+    order.  ``plan_store`` is the active persistent store's ledger
+    (hits/misses/saves/corrupt/stale plus the export family; see
+    ``persist.PlanStore.stats``), or None when no store is attached.
     """
     out = {
         "plan_cache": global_plan_cache.stats(),
         "decomp_plan_cache": global_decomp_cache.stats(),
         "env_plan_cache": global_env_cache.stats(),
+        "plan_store": store_stats(),
     }
     if engines:
         out["engines"] = [e.stats() for e in engines]
@@ -103,6 +123,16 @@ __all__ = [
     "global_decomp_cache",
     "global_env_cache",
     "cache_stats",
+    "PERSIST_VERSION",
+    "PlanStore",
+    "activate_store",
+    "active_store",
+    "canonical_signature",
+    "deactivate_store",
+    "enable_compilation_cache",
+    "signature_digest",
+    "store_stats",
+    "using_store",
     "FAULT_POINTS",
     "FaultInjected",
     "FaultRegistry",

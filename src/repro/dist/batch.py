@@ -112,6 +112,12 @@ def memo_dev_idx(layout, mesh, tracing: bool, host_arrays):
     into the trace as constants); memoizing there would leak tracers.
     Shared by the batched (``BatchedLayout``) and csr (``CsrLayout``)
     backends so the cross-mesh/tracer-leak handling cannot diverge.
+
+    This memo is also the persistence boundary for device state: plans
+    loaded from a ``PlanStore`` (dist/persist.py) arrive with ``dev_idx``
+    stripped by the layouts' ``__getstate__`` — device buffers belong to
+    the process that committed them, never to a pickle — and this lazy
+    re-commit rebuilds them on first use in the loading process.
     """
     if tracing:
         return host_arrays

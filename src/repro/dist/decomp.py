@@ -51,7 +51,7 @@ import numpy as np
 
 from ..tensor.blocksparse import BlockSparseTensor
 from ..tensor.qn import IN, Index, OUT, qzero
-from . import faults
+from . import faults, persist
 from .batch import is_tracing as _is_tracing
 from .faults import FaultInjected, NumericalHealthError
 from .plan import (
@@ -459,11 +459,30 @@ class DecompositionEngine:
             self.rsvd_power_iters,
             self.rsvd_seed,
         )
+        blocks_in = tuple(theta.blocks[k] for k in plan.block_order)
         core = plan._exec.get(key)
         if core is None:
-            core = self._build_core(plan, key[0], methods, sketch)
+            # export round-trip (dist/persist.py): a primed store replays the
+            # core's StableHLO instead of re-tracing the Python body; a cold
+            # run with a store attached exports what it builds (best-effort —
+            # any failure just re-traces).  Only the jitted path exports.
+            store = persist.active_store() if self.jit else None
+            ekey = ("svd_core", plan.signature, key)
+            if store is not None:
+                core = store.load_export(ekey, (blocks_in,))
+            if core is None:
+                core = self._build_core(plan, key[0], methods, sketch)
+                if store is not None:
+                    store.save_export(
+                        ekey,
+                        svd_core_body(
+                            plan, key[0], methods, sketch,
+                            self.rsvd_power_iters, self.rsvd_seed,
+                        ),
+                        (blocks_in,),
+                    )
             _cache_exec(plan, key, core)
-        bucket_out, s_cat = core(tuple(theta.blocks[k] for k in plan.block_order))
+        bucket_out, s_cat = core(blocks_in)
 
         self.svd_calls += 1
         self.svd_flops += self._call_flops(plan, methods, sketch)
@@ -491,7 +510,16 @@ class DecompositionEngine:
         slice_key = ("slice", key, m_tuple)
         slice_core = plan._exec.get(slice_key)
         if slice_core is None:
-            slice_core = self._build_slice_core(plan, m_tuple)
+            store = persist.active_store() if self.jit else None
+            ekey = ("svd_slice", plan.signature, key, m_tuple)
+            if store is not None:
+                slice_core = store.load_export(ekey, (bucket_out,))
+            if slice_core is None:
+                slice_core = self._build_slice_core(plan, m_tuple)
+                if store is not None:
+                    store.save_export(
+                        ekey, slice_core_body(plan, m_tuple), (bucket_out,)
+                    )
             _cache_exec(plan, slice_key, slice_core)
         u_flat, v_flat, s_flat = slice_core(bucket_out)
 

@@ -45,7 +45,7 @@ import jax.numpy as jnp
 
 from ..tensor.blocksparse import BlockSparseTensor
 from ..tensor.qn import Index
-from . import faults
+from . import faults, persist
 from .batch import execute_pairs, pad_block_sparse, unpad_block_sparse
 from .faults import FaultInjected
 from .plan import (
@@ -69,6 +69,37 @@ def env_out_indices(
     if side == "left":
         return (site.indices[2].dual(), mpo.indices[3], site.indices[2])
     return (site.indices[0].dual(), mpo.indices[0], site.indices[0])
+
+
+def env_core_body(plan: EnvironmentPlan):
+    """All three contractions + conj + transpose, one traceable function.
+
+    Module-level (like ``decomp.svd_core_body``) so the engine's jitted
+    wrapper and the ``jax.export`` persistence path (dist/persist.py) trace
+    the identical body.  Input: the (padded) env/site/MPO block arrays in
+    the plan's sorted key order; output: env blocks in ``plan.out_keys``
+    order.  Plan metadata folds into the trace as constants.
+    """
+    p1, p2, p3 = plan.steps
+    left = plan.side == "left"
+    perm = plan.perm
+
+    def body(env_blocks, site_blocks, mpo_blocks):
+        e = dict(zip(plan.env_keys, env_blocks))
+        t = dict(zip(plan.site_keys, site_blocks))
+        w = dict(zip(plan.mpo_keys, mpo_blocks))
+        bra = {k: jnp.conj(v) for k, v in t.items()}
+        if left:
+            x = execute_pairs(p1, e, t)
+            x = execute_pairs(p2, x, w)
+            x = execute_pairs(p3, bra, x)
+        else:
+            x = execute_pairs(p1, t, e)
+            x = execute_pairs(p2, x, w)
+            x = execute_pairs(p3, x, bra)
+        return tuple(jnp.transpose(x[k], perm) for k in plan.pre_out_keys)
+
+    return body
 
 
 class EnvironmentEngine:
@@ -105,35 +136,13 @@ class EnvironmentEngine:
 
     # ------------------------------------------------------------- jit core
     def _build_core(self, plan: EnvironmentPlan):
-        """All three contractions + conj + transpose, one traced program.
+        """Compile (or wrap eagerly) the shared ``env_core_body``.
 
-        Input: the (padded) env/site/MPO block arrays in the plan's sorted
-        key order.  Output: the env blocks in ``plan.out_keys`` order.  Plan
-        metadata folds into the trace as constants, so the compiled
-        executable is keyed purely by the padded block structure.
+        One compiled executable per padded block structure — plan metadata
+        folds into the trace as constants.
         """
-        p1, p2, p3 = plan.steps
-        left = plan.side == "left"
-        perm = plan.perm
         engine = self
-
-        def body(env_blocks, site_blocks, mpo_blocks):
-            e = dict(zip(plan.env_keys, env_blocks))
-            t = dict(zip(plan.site_keys, site_blocks))
-            w = dict(zip(plan.mpo_keys, mpo_blocks))
-            bra = {k: jnp.conj(v) for k, v in t.items()}
-            if left:
-                x = execute_pairs(p1, e, t)
-                x = execute_pairs(p2, x, w)
-                x = execute_pairs(p3, bra, x)
-            else:
-                x = execute_pairs(p1, t, e)
-                x = execute_pairs(p2, x, w)
-                x = execute_pairs(p3, x, bra)
-            return tuple(
-                jnp.transpose(x[k], perm) for k in plan.pre_out_keys
-            )
-
+        body = env_core_body(plan)
         if not self.jit:
             return body
 
@@ -182,15 +191,39 @@ class EnvironmentEngine:
         else:
             env_p, T_p, W_p = env, T, W
         plan = self.cache.get(env_p, T_p, W_p, side)
-        core = plan._exec.get(self.jit)
-        if core is None:
-            core = self._build_core(plan)
-            plan._exec[self.jit] = core
-        blocks = core(
+        args = (
             tuple(env_p.blocks[k] for k in plan.env_keys),
             tuple(T_p.blocks[k] for k in plan.site_keys),
             tuple(W_p.blocks[k] for k in plan.mpo_keys),
         )
+        # export round-trip (dist/persist.py), mirroring the decomp engine:
+        # primed store -> replay StableHLO, no Python re-trace; cold run
+        # with store -> export what was built (best-effort).  Deserialized
+        # artifacts are opaque executables, so the path is skipped entirely
+        # when the operands are tracers (the stacked serve pipeline vmaps
+        # through this engine) — only the traceable built core can inline.
+        core = None
+        tracing = any(
+            isinstance(x, jax.core.Tracer) for xs in args for x in xs
+        )
+        store = persist.active_store() if self.jit and not tracing else None
+        if store is not None:
+            core = plan._exec.get("export")
+            if core is None:
+                ekey = ("env_core", plan.signature)
+                core = store.load_export(ekey, args)
+                if core is None:
+                    store.save_export(ekey, env_core_body(plan), args)
+                    core = False  # remembered: no artifact for this plan
+                plan._exec["export"] = core
+            if core is False:
+                core = None
+        if core is None:
+            core = plan._exec.get(self.jit)
+            if core is None:
+                core = self._build_core(plan)
+                plan._exec[self.jit] = core
+        blocks = core(*args)
         out = BlockSparseTensor(
             plan.out_indices, dict(zip(plan.out_keys, blocks)), plan.out_charge
         )

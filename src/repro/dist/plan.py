@@ -43,6 +43,12 @@ PlanSignature = Tuple
 
 Axes = Tuple[Tuple[int, ...], Tuple[int, ...]]
 
+# Process-wide persistent plan store (dist/persist.py sets this via
+# ``activate_store``).  Lives here — not in persist.py — so the caches can
+# consult it without importing persist (which imports this module).  A cache
+# instance's own ``store`` attribute, when set, takes precedence.
+_ACTIVE_STORE = None
+
 
 def plan_signature(
     a: BlockSparseTensor, b: BlockSparseTensor, axes: Axes
@@ -112,6 +118,17 @@ class CsrLayout:
     # mesh must not be replayed under another (keyed None = no policy)
     dev_idx: Dict = dataclasses.field(default_factory=dict)
 
+    # device arrays are process-local handles: never persisted, rebuilt by
+    # ``batch.memo_dev_idx`` on first use in the loading process
+    def __getstate__(self):
+        state = dict(self.__dict__)
+        state["dev_idx"] = {}
+        return state
+
+    def __setstate__(self, state):
+        self.__dict__.update(state)
+        self.dev_idx = {}
+
 
 @dataclasses.dataclass
 class ShapeBucket:
@@ -148,6 +165,16 @@ class BatchedLayout:
     @property
     def num_buckets(self) -> int:
         return len(self.buckets)
+
+    # per-mesh device handles: dropped on pickle, exactly like CsrLayout
+    def __getstate__(self):
+        state = dict(self.__dict__)
+        state["dev_idx"] = {}
+        return state
+
+    def __setstate__(self, state):
+        self.__dict__.update(state)
+        self.dev_idx = {}
 
 
 @dataclasses.dataclass
@@ -428,6 +455,23 @@ class ContractionPlan:
     def out_block_shape(self, kc: BlockKey) -> Tuple[int, ...]:
         return tuple(ix.sector_dim(s) for ix, s in zip(self.out_indices, kc))
 
+    def materialize(self, pair_overhead: float = 16384.0) -> "ContractionPlan":
+        """Force the lazy layouts a run would build anyway, for persistence.
+
+        Called by ``dist.persist.PlanStore.save_plan`` so the priming
+        process pays the layout derivation once and every loading process
+        gets it for free.  The batched layout is always worth carrying; the
+        dense slice table (a recursive valid-key enumeration) only when the
+        engine cost model could actually route this plan to the dense
+        backend — mirrored here with the same default dispatch overhead as
+        ``engine.PAIR_OVERHEAD_FLOPS``.
+        """
+        if self.pairs:
+            _ = self.batched
+        if self.flops_dense <= self.flops_list + pair_overhead * self.num_pairs:
+            _ = self.dense_out_slices()
+        return self
+
 
 # ------------------------------------------------------------ decomposition
 def decomp_signature(theta: BlockSparseTensor, n_row_modes: int) -> PlanSignature:
@@ -652,6 +696,19 @@ class DecompositionPlan:
     def num_buckets(self) -> int:
         return len(self.buckets)
 
+    # compiled executables are process-local (they close over an engine and
+    # a live XLA client): never persisted, rebuilt lazily by the loading
+    # process's DecompositionEngine — where the persistent compilation cache
+    # and the export store make the rebuild cheap
+    def __getstate__(self):
+        state = dict(self.__dict__)
+        state["_exec"] = {}
+        return state
+
+    def __setstate__(self, state):
+        self.__dict__.update(state)
+        self._exec = {}
+
 
 # ------------------------------------------------------------- environments
 def env_signature(
@@ -784,6 +841,16 @@ class EnvironmentPlan:
             flops=p1.flops_list + p2.flops_list + p3.flops_list,
         )
 
+    # compiled fused cores are process-local, exactly like DecompositionPlan
+    def __getstate__(self):
+        state = dict(self.__dict__)
+        state["_exec"] = {}
+        return state
+
+    def __setstate__(self, state):
+        self.__dict__.update(state)
+        self._exec = {}
+
 
 # ------------------------------------------------------------------- caches
 class _SignatureLRU:
@@ -801,7 +868,16 @@ class _SignatureLRU:
     drop one core set.  Lock ordering is acyclic: an ``EnvPlanCache`` build
     acquires the contraction ``PlanCache`` lock (for its three step plans),
     never the reverse.
+
+    Persistence (dist/persist.py): on an in-memory miss the cache consults
+    its attached ``PlanStore`` (``self.store``, else the process-wide
+    ``_ACTIVE_STORE``) before building, and writes every fresh build back.
+    ``builds`` counts actual ``_build`` invocations — with a primed store
+    it stays zero, the property the cold-start regression test pins down.
     """
+
+    # persist.PLAN_KINDS entry naming this cache's store subdirectory
+    kind = "contraction"
 
     def __init__(self, maxsize: int = 4096):
         self.maxsize = maxsize
@@ -810,6 +886,8 @@ class _SignatureLRU:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.builds = 0
+        self.store = None  # per-cache PlanStore override (None = _ACTIVE_STORE)
 
     def _get(self, sig, build):
         with self._lock:
@@ -819,7 +897,13 @@ class _SignatureLRU:
                 self._plans.move_to_end(sig)
                 return plan
             self.misses += 1
-            plan = build()
+            store = self.store if self.store is not None else _ACTIVE_STORE
+            plan = store.load_plan(self.kind, sig) if store is not None else None
+            if plan is None:
+                self.builds += 1
+                plan = build()
+                if store is not None:
+                    store.save_plan(self.kind, sig, plan)
             self._plans[sig] = plan
             while len(self._plans) > self.maxsize:
                 self._plans.popitem(last=False)
@@ -835,6 +919,7 @@ class _SignatureLRU:
             self.hits = 0
             self.misses = 0
             self.evictions = 0
+            self.builds = 0
 
     def stats(self) -> Dict[str, int]:
         with self._lock:
@@ -842,6 +927,7 @@ class _SignatureLRU:
                 "hits": self.hits,
                 "misses": self.misses,
                 "evictions": self.evictions,
+                "builds": self.builds,
                 "size": len(self._plans),
             }
 
@@ -859,6 +945,8 @@ class PlanCache(_SignatureLRU):
 class DecompPlanCache(_SignatureLRU):
     """LRU cache of DecompositionPlans keyed by structural signature."""
 
+    kind = "decomp"
+
     def get(self, theta: BlockSparseTensor, n_row_modes: int) -> DecompositionPlan:
         sig = decomp_signature(theta, n_row_modes)
         return self._get(sig, lambda: DecompositionPlan.build(theta, n_row_modes))
@@ -871,6 +959,8 @@ class EnvPlanCache(_SignatureLRU):
     from (the global contraction cache by default, so the eager three-call
     path and the fused core share step plans).
     """
+
+    kind = "env"
 
     def __init__(
         self, maxsize: int = 4096, contraction_cache: Optional[PlanCache] = None

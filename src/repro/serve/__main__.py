@@ -10,6 +10,15 @@ Example (the README quickstart)::
 
     PYTHONPATH=src python -m repro.serve --model heisenberg --n-sites 8 \
         --max-bond 16 --sweep J=0.8:1.2:4 --batch 4 --check
+
+``--warmup MODEL[,m=BOND][,n=SITES]`` (repeatable, requires
+``--plan-store``) switches to warmup-only mode: prime the persistent plan
++ executable store for each named target and exit, so a later worker on
+the same store starts its first sweep near steady-state speed (README
+"Cold start", DESIGN.md Sec. 3.9)::
+
+    PYTHONPATH=src python -m repro.serve --warmup heisenberg,m=8,n=6 \
+        --batch 2 --plan-store /tmp/dmrg_store
 """
 from __future__ import annotations
 
@@ -62,6 +71,69 @@ def build_grid(sweeps: List[Tuple[str, np.ndarray]]) -> List[Dict[str, float]]:
     ]
 
 
+def parse_warmup(arg: str, default_m: int, default_n: int):
+    """``MODEL[,m=BOND][,n=SITES]`` -> (model, max_bond, n_sites)."""
+    parts = arg.split(",")
+    model, m, n = parts[0], default_m, default_n
+    try:
+        for p in parts[1:]:
+            k, v = p.split("=", 1)
+            if k == "m":
+                m = int(v)
+            elif k == "n":
+                n = int(v)
+            else:
+                raise ValueError
+        if not model:
+            raise ValueError
+    except ValueError:
+        raise SystemExit(
+            f"bad --warmup {arg!r}: expected MODEL[,m=BOND][,n=SITES]"
+        )
+    return model, m, n
+
+
+def run_warmup(args) -> int:
+    """Warmup-only mode: prime the plan store for each --warmup target.
+
+    For every ``MODEL,m=...`` target this runs the service warmup — one full
+    solve per power-of-two slot size, covering every bond-schedule structure
+    — against the activated ``--plan-store``, then the blocking export
+    compile pass.  A fresh worker on the same store afterwards starts its
+    first sweep within ~2x of steady state (benchmarks/bench_dist.py
+    ``cold_start`` leg) instead of ~20x.
+    """
+    from repro.dist import store_stats
+    from repro.serve import DMRGService, ProblemSpec
+
+    if not args.plan_store:
+        print("--warmup requires --plan-store (nowhere to persist) ",
+              file=sys.stderr)
+        return 2
+    svc = DMRGService(max_batch=args.batch, start=False,
+                      plan_store=args.plan_store)
+    sizes = [s for s in (1, 2, 4, 8, 16, 32, 64) if s <= args.batch]
+    try:
+        for target in args.warmup:
+            model, m, n = parse_warmup(target, args.max_bond, args.n_sites)
+            spec = ProblemSpec.make(
+                model, n, max_bond=m,
+                sweeps_per_bond=args.sweeps_per_bond,
+                davidson_iters=args.davidson_iters,
+            )
+            t0 = time.perf_counter()
+            svc.warmup(spec, sizes=sizes)
+            print(f"warmed {model} (m={m}, n={n}) x sizes {sizes} in "
+                  f"{time.perf_counter() - t0:.1f}s")
+        st = store_stats()
+        print(f"plan store {st['root']}: {st['saves']} plan saves, "
+              f"{st['export_saves']} export saves, "
+              f"{st['export_prefetched']} artifacts compiled")
+        return 0
+    finally:
+        svc.shutdown()
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.serve",
@@ -81,6 +153,14 @@ def main(argv=None) -> int:
                     help="admission bound (backpressure threshold)")
     ap.add_argument("--no-warmup", action="store_true",
                     help="skip precompilation (first batches will retrace)")
+    ap.add_argument("--plan-store", metavar="DIR",
+                    help="persistent plan + executable store (DESIGN.md 3.9); "
+                         "activated for the whole process, primed by warmup")
+    ap.add_argument("--warmup", action="append", default=[],
+                    metavar="MODEL[,m=BOND][,n=SITES]",
+                    help="warmup-only mode: precompile the named model's full "
+                         "bond-schedule structure x slot-size set into "
+                         "--plan-store, then exit (repeatable)")
     ap.add_argument("--stats-json", metavar="PATH",
                     help="write service + plan-cache stats as JSON ('-' = stdout)")
     ap.add_argument("--checkpoint-dir", metavar="DIR",
@@ -90,6 +170,9 @@ def main(argv=None) -> int:
                     help="verify vs per-problem solves, zero retraces, and "
                          "a zero recovery ledger (no retries/bisections)")
     args = ap.parse_args(argv)
+
+    if args.warmup:
+        return run_warmup(args)
 
     from repro.core import run_dmrg
     from repro.serve import DEVICE_LOCK, DMRGService, ProblemSpec, group_key
@@ -109,7 +192,8 @@ def main(argv=None) -> int:
     ]
 
     svc = DMRGService(max_batch=args.batch, max_queue=args.queue,
-                      checkpoint_dir=args.checkpoint_dir)
+                      checkpoint_dir=args.checkpoint_dir,
+                      plan_store=args.plan_store)
     try:
         if not args.no_warmup:
             sizes = [s for s in (1, 2, 4, 8, 16, 32, 64) if s <= args.batch]

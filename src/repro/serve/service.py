@@ -46,7 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .. import dist
-from ..dist import faults
+from ..dist import faults, persist
 from ..dist.faults import FaultInjected, NumericalHealthError
 from ..tensor.blocksparse import BlockSparseTensor
 from .multicore import run_dmrg_multi
@@ -115,6 +115,14 @@ class DMRGService:
         (``serve_journal.json``, atomic rewrite) and re-submitted on the
         next construction with the same directory — completed-but-
         undelivered work is recomputed, which determinism makes exact.
+    plan_store: a ``repro.dist.PlanStore`` or path; activated process-wide
+        for the life of the service in long-lived-worker mode
+        (``prefetch="compile"``): plans, exported cores and compiled
+        executables load from the store in the background, so a service on
+        a warmed store reaches steady-state throughput on its first slot
+        (~2x a steady sweep instead of ~20x; DESIGN.md Sec. 3.9).
+        ``warmup`` writes back what it compiles, including the blocking
+        export-compile pass that completes the store's cold-start contract.
     """
 
     def __init__(
@@ -129,7 +137,13 @@ class DMRGService:
         max_worker_restarts: int = 5,
         max_tombstones: int = 256,
         checkpoint_dir: Optional[str] = None,
+        plan_store=None,
     ):
+        self.plan_store = None
+        if plan_store is not None:
+            self.plan_store = persist.activate_store(
+                plan_store, prefetch="compile"
+            )
         self.ops = ops if ops is not None else StackedOps()
         self.scheduler = BatchScheduler(max_batch)
         self.max_queue = max_queue
@@ -378,6 +392,14 @@ class DMRGService:
         covering every bond-schedule structure at every power-of-two batch
         size the scheduler can cut — outside the serving ledger.  After this,
         requests in the group replay compiled code only.
+
+        With a plan store attached, the solves also *prime the store* (plans,
+        exports, compiled executables), and a final blocking
+        ``prefetch_exports(compile=True)`` pass compiles every exported
+        core's wrapped module into the persistent compilation cache — the
+        second half of the cold-start contract: a FRESH worker process on
+        this store then replays everything and lands its first sweep within
+        ~2x of steady state.
         """
         space, mpo = build_problem(spec)
         sizes = sorted({s for s in sizes if s <= max(
@@ -394,6 +416,10 @@ class DMRGService:
                     davidson_iters=spec.davidson_iters,
                     ops=self.ops,
                 )
+        store = persist.active_store()
+        if store is not None:
+            with DEVICE_LOCK:
+                store.prefetch_exports(compile=True, block=True)
         with self._cv:
             self._warmed.add((group_key(spec, mpo), tuple(sizes)))
             self._retrace_floor = self.ops.retraces

@@ -40,12 +40,30 @@ def _release_compiled_executables():
     crash).  Clearing per module keeps each module's within-module caching
     behavior (retrace-counter tests warm up and assert inside one module)
     while releasing executables no later test can reach.
+
+    Interaction with the persistent compilation cache (dist/persist.py):
+    ``jax.clear_caches()`` drops only the *in-memory* trace/executable
+    caches — the on-disk cache a ``PlanStore`` activation configured
+    (``jax_compilation_cache_dir``) survives, by design, so post-clear
+    re-compiles of already-seen programs are disk hits rather than full
+    XLA compiles.  The disk entries hold no mmaps, so they don't count
+    against ``vm.max_map_count``; only re-*loading* them does, and that is
+    exactly the per-module budget this fixture resets.  The cache-dir
+    config itself also survives (deliberately — unsetting it mid-process
+    would orphan live executables' entries), which is why store-activating
+    tests point it at per-test tmp dirs and why the teardown below detaches
+    any store a test module leaked without touching the config.
     """
     yield
     import gc
 
     import jax
 
+    # a leaked process-wide PlanStore would redirect every later module's
+    # plan-cache misses into a (possibly deleted) tmp dir; detach it first
+    from repro.dist import persist
+
+    persist.deactivate_store()
     jax.clear_caches()
     gc.collect()
 

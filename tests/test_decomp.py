@@ -84,7 +84,7 @@ class TestDecompPlan:
         theta = rand_theta(0)
         cache = DecompPlanCache()
         p1 = cache.get(theta, 2)
-        assert cache.stats() == {"hits": 0, "misses": 1, "evictions": 0, "size": 1}
+        assert cache.stats() == {"hits": 0, "misses": 1, "evictions": 0, "size": 1, "builds": 1}
         # same structure, different numbers -> hit (signature is structural)
         theta2 = BlockSparseTensor(
             theta.indices, {k: 2.0 * b for k, b in theta.blocks.items()}, theta.charge
@@ -326,7 +326,7 @@ class TestEngineIntegration:
         )
         eng.svd_split(theta2, 2, max_bond=8)  # same structure: cached compile
         assert eng.jit_retraces == traces
-        assert eng.cache.stats() == {"hits": 1, "misses": 1, "evictions": 0, "size": 1}
+        assert eng.cache.stats() == {"hits": 1, "misses": 1, "evictions": 0, "size": 1, "builds": 1}
 
     def test_tracer_input_raises(self):
         theta = rand_theta(1)

@@ -55,10 +55,10 @@ class TestPlanCache:
         A, B = rand_pair(0)
         cache = PlanCache()
         p1 = cache.get(A, B, AX)
-        assert cache.stats() == {"hits": 0, "misses": 1, "evictions": 0, "size": 1}
+        assert cache.stats() == {"hits": 0, "misses": 1, "evictions": 0, "size": 1, "builds": 1}
         p2 = cache.get(A, B, AX)
         assert p2 is p1
-        assert cache.stats() == {"hits": 1, "misses": 1, "evictions": 0, "size": 1}
+        assert cache.stats() == {"hits": 1, "misses": 1, "evictions": 0, "size": 1, "builds": 1}
         # same structure, different numbers -> hit (signature is structural)
         A2 = BlockSparseTensor(
             A.indices, {k: 2.0 * b for k, b in A.blocks.items()}, A.charge

@@ -139,10 +139,10 @@ class TestCompileOnceEnv:
         ee = EnvironmentEngine(cache=EnvPlanCache())
         A = left_edge(T[0], W[0])
         ee.update_left(A, T[0], W[0])
-        assert ee.cache.stats() == {"hits": 0, "misses": 1, "evictions": 0, "size": 1}
+        assert ee.cache.stats() == {"hits": 0, "misses": 1, "evictions": 0, "size": 1, "builds": 1}
         rt = ee.jit_retraces
         ee.update_left(A, T[0], W[0])
-        assert ee.cache.stats() == {"hits": 1, "misses": 1, "evictions": 0, "size": 1}
+        assert ee.cache.stats() == {"hits": 1, "misses": 1, "evictions": 0, "size": 1, "builds": 1}
         assert ee.jit_retraces == rt  # compiled core reused, not retraced
 
     def test_left_and_right_have_distinct_plans(self):

@@ -210,9 +210,13 @@ class TestPlanCacheThreadSafety:
 
     def test_cache_stats_shape(self):
         out = cache_stats()
-        assert set(out) == {"plan_cache", "decomp_plan_cache", "env_plan_cache"}
-        for v in out.values():
-            assert set(v) == {"hits", "misses", "evictions", "size"}
+        assert set(out) == {
+            "plan_cache", "decomp_plan_cache", "env_plan_cache", "plan_store",
+        }
+        for k in ("plan_cache", "decomp_plan_cache", "env_plan_cache"):
+            assert set(out[k]) == {
+                "hits", "misses", "evictions", "size", "builds",
+            }
 
 
 class TestService:
