@@ -50,6 +50,19 @@ leg asserts builds==0 and primed/cold energy equality <1e-10 outright;
 ``--check`` additionally gates ``primed_first_s`` at 2x the checked-in
 record.  The record is written to ``benchmarks/bench_coldstart.json``
 (untracked; uploaded as a CI artifact by the ``coldstart`` job).
+
+``--spmd`` runs only the **weak-scaling leg** (also part of the full run,
+``weak_scaling`` in the JSON): one fresh subprocess per fake-device count
+in {1, 2, 4, 8}, each sweeping the cold-start workload in true SPMD mode
+(``run_dmrg(spmd=True)`` semantics: device-resident replicated block
+storage + per-bucket shard_map collective GEMMs, docs/distributed.md)
+against the single-program list reference.  Every count asserts energy
+equality <1e-10 and zero compiled-SPMD-program growth inside the timed
+window; the 4-device leg additionally times the gather-to-host baseline
+(same batched algorithm, storage-mode policy) and asserts the SPMD sweep
+is >=5x faster.  The record is written to ``benchmarks/bench_spmd.json``
+(untracked; uploaded as a CI artifact by the ``spmd`` job); ``--check``
+gates the 4-device ``spmd_steady_s`` at 2x the checked-in record.
 """
 from __future__ import annotations
 
@@ -543,13 +556,226 @@ def _run_coldstart():
     return rec
 
 
+# ---------------------------------------------------------- weak-scaling leg
+
+SPMD_N = 8    # weak-scaling workload: the cold-start J1-J2 ladder — small
+SPMD_M = 16   # enough that four device counts fit in CI budget, block-rich
+              # enough that every bucket shape class crosses the collectives
+SPMD_DEVICES = (1, 2, 4, 8)
+SPMD_GATE_DEVICES = 4    # device count carrying the gather-vs-spmd gate
+SPMD_GATE_SPEEDUP = 5.0  # spmd must beat the gather-to-host path by this
+SPMD_TIMED = 3           # timed sweeps per leg; steady state = min of these
+
+
+def _bench_spmd(ndev):
+    """One weak-scaling subprocess: list vs SPMD sweeps at ``ndev`` devices.
+
+    Runs the SPMD (``mode="spmd"``, device-resident replicated storage +
+    per-bucket shard_map collectives) sweep against the single-program list
+    reference, reporting first/steady sweep seconds, the decomposition/env
+    stage split, energy equality, and the SPMD collective ledger
+    (``dist.spmd.stats()``) — with the hard compile-once check that the set
+    of compiled SPMD programs stopped growing inside the timed window.
+
+    At ``SPMD_GATE_DEVICES`` it also times the gather-to-host baseline the
+    SPMD mode replaces: the *same* bucketed batched algorithm under a
+    storage-mode policy, where every engine operation re-gathers the
+    sharded blocks to replicated form on host before stacking buckets.
+    That pair of numbers carries the acceptance gate (``SPMD_GATE_SPEEDUP``).
+
+    Protocol: steady state is the MIN over ``SPMD_TIMED`` sweeps (robust
+    to load spikes on shared CI runners, unlike the mean), and the SPMD
+    leg warms two sweeps longer than the others — its first compile ramp
+    (per-bucket shard_map programs inlined into the fused cores) has the
+    longest tail.
+    """
+    import jax
+
+    from repro.core.models import heisenberg_j1j2_terms
+    from repro.core.mpo import build_mpo, compress_mpo
+    from repro.core.mps import neel_states, product_state_mps
+    from repro.core.siteops import spin_half_space
+    from repro.core.sweep import DMRGEngine
+    from repro.dist import BlockShardPolicy, make_block_mesh, spmd_stats
+
+    assert jax.device_count() == ndev, (jax.device_count(), ndev)
+    n, m = SPMD_N, SPMD_M
+    sp = spin_half_space()
+    terms = heisenberg_j1j2_terms(n // 2, 2, 1.0, 0.5, cylinder=False)
+    mpo = compress_mpo(build_mpo(sp, terms, n), cutoff=1e-13)
+
+    def fresh(**kw):
+        mps = product_state_mps(sp, neel_states(sp, n))
+        return DMRGEngine(mps, mpo, davidson_iters=2, **kw)
+
+    def timed(eng, warm=WARM):
+        t0 = time.perf_counter()
+        eng.sweep(max_bond=m)
+        first = time.perf_counter() - t0
+        for _ in range(warm - 1):
+            eng.sweep(max_bond=m)
+        sweeps = []
+        svd_s = env_s = 0.0
+        for _ in range(SPMD_TIMED):
+            t0 = time.perf_counter()
+            s = eng.sweep(max_bond=m)
+            sweeps.append(time.perf_counter() - t0)
+            svd_s += s.svd_seconds
+            env_s += s.env_seconds
+        steady = min(sweeps)
+        return first, steady, float(s.energy), svd_s / SPMD_TIMED, env_s / SPMD_TIMED
+
+    _, t_list, e_list, _, _ = timed(fresh(algo="list"))
+
+    mesh = make_block_mesh()
+    policy = BlockShardPolicy(mesh, mode="spmd")
+    eng = fresh(algo="batched", jit_matvec=True, shard_policy=policy)
+    t0 = time.perf_counter()
+    eng.sweep(max_bond=m)
+    first = time.perf_counter() - t0
+    for _ in range(WARM + 1):
+        eng.sweep(max_bond=m)
+    progs0 = spmd_stats()["unique_programs"]
+    sweeps = []
+    svd_s = env_s = 0.0
+    for _ in range(SPMD_TIMED):
+        t0 = time.perf_counter()
+        s = eng.sweep(max_bond=m)
+        sweeps.append(time.perf_counter() - t0)
+        svd_s += s.svd_seconds
+        env_s += s.env_seconds
+    steady = min(sweeps)
+    prog_growth = spmd_stats()["unique_programs"] - progs0
+
+    rec = {
+        "devices": ndev,
+        "mesh": [int(mesh.shape["row"]), int(mesh.shape["col"])],
+        "list_steady_s": t_list,
+        "spmd_first_s": first,
+        "spmd_steady_s": steady,
+        "spmd_decomp_stage_s": svd_s / SPMD_TIMED,
+        "spmd_env_stage_s": env_s / SPMD_TIMED,
+        "spmd_vs_list_ratio": steady / max(t_list, 1e-12),
+        "energy_diff": abs(float(s.energy) - e_list),
+        "timed_program_growth": prog_growth,
+        "spmd_stats": spmd_stats(),
+    }
+    if ndev == SPMD_GATE_DEVICES:
+        # the gather-to-host baseline: same algorithm, storage-mode policy
+        gpol = BlockShardPolicy(make_block_mesh())  # auto -> storage on CPU
+        assert gpol.storage_only
+        _, t_gather, e_gather, _, _ = timed(
+            fresh(algo="batched", shard_policy=gpol)
+        )
+        rec["gather_steady_s"] = t_gather
+        rec["gather_energy_diff"] = abs(e_gather - e_list)
+        rec["spmd_vs_gather_speedup"] = t_gather / max(steady, 1e-12)
+    return rec
+
+
+def _spmd_child_main():
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    ndev = int(sys.argv[sys.argv.index("--child-spmd") + 1])
+    rec = _bench_spmd(ndev)
+    print("BENCH_SPMD_JSON " + json.dumps(rec))
+
+
+def _spmd_subprocess(ndev):
+    env = dict(os.environ)
+    # replace any inherited device-count flag with this leg's count
+    flags = [
+        f for f in env.get("XLA_FLAGS", "").split()
+        if not f.startswith("--xla_force_host_platform_device_count")
+    ]
+    flags.append(f"--xla_force_host_platform_device_count={ndev}")
+    env["XLA_FLAGS"] = " ".join(flags)
+    env.setdefault("JAX_ENABLE_X64", "1")
+    cmd = [sys.executable, os.path.abspath(__file__), "--child-spmd", str(ndev)]
+    proc = subprocess.run(
+        cmd, capture_output=True, text=True, env=env, timeout=3600
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"spmd child ({ndev} devices) failed:\n{proc.stderr[-2000:]}"
+        )
+    for line in proc.stdout.splitlines():
+        if line.startswith("BENCH_SPMD_JSON "):
+            return json.loads(line[len("BENCH_SPMD_JSON "):])
+    raise AssertionError(proc.stdout)
+
+
+def _run_weak_scaling():
+    """The weak-scaling leg: one subprocess per fake-device count.
+
+    Each count gets its own process because the device count is fixed by
+    ``XLA_FLAGS`` before jax imports.  Asserts, at every count: SPMD energy
+    equals the list reference to <1e-10 and the compiled-program set
+    stopped growing inside the timed window (compile-once).  At
+    ``SPMD_GATE_DEVICES`` it additionally asserts the acceptance gate:
+    SPMD steady sweep >= ``SPMD_GATE_SPEEDUP``x faster than the
+    gather-to-host (storage-mode, same algorithm) baseline.
+    """
+    legs = {}
+    for ndev in SPMD_DEVICES:
+        leg = _spmd_subprocess(ndev)
+        assert leg["energy_diff"] < 1e-10, leg
+        assert leg["timed_program_growth"] == 0, leg
+        legs[str(ndev)] = leg
+    gate_leg = legs[str(SPMD_GATE_DEVICES)]
+    assert gate_leg["gather_energy_diff"] < 1e-10, gate_leg
+    speedup = gate_leg["spmd_vs_gather_speedup"]
+    assert speedup >= SPMD_GATE_SPEEDUP, (
+        f"spmd vs gather-to-host speedup {speedup:.2f}x at "
+        f"{SPMD_GATE_DEVICES} devices is below the "
+        f"{SPMD_GATE_SPEEDUP:.0f}x acceptance gate: {gate_leg}"
+    )
+    return {
+        "n_sites": SPMD_N,
+        "max_bond": SPMD_M,
+        "warm_sweeps": WARM,
+        "spmd_warm_sweeps": WARM + 2,
+        "timed_sweeps": SPMD_TIMED,
+        "steady_estimator": "min",
+        "device_counts": list(SPMD_DEVICES),
+        "legs": legs,
+        "gate": {
+            "devices": SPMD_GATE_DEVICES,
+            "required_speedup": SPMD_GATE_SPEEDUP,
+            "spmd_vs_gather_speedup": speedup,
+        },
+    }
+
+
+def spmd_rows(ws):
+    """CSV rows for a weak-scaling record (shared by full and --spmd)."""
+    rows = [
+        (
+            f"dist_spmd_sweep_{ndev}dev",
+            ws["legs"][str(ndev)]["spmd_steady_s"] * 1e6,
+            f"vs_list={ws['legs'][str(ndev)]['spmd_vs_list_ratio']:.2f}x;"
+            f"ediff={ws['legs'][str(ndev)]['energy_diff']:.1e};"
+            f"programs={ws['legs'][str(ndev)]['spmd_stats']['unique_programs']}",
+        )
+        for ndev in ws["device_counts"]
+    ]
+    g = ws["gate"]
+    rows.append((
+        "dist_spmd_vs_gather",
+        ws["legs"][str(g["devices"])]["gather_steady_s"] * 1e6,
+        f"speedup={g['spmd_vs_gather_speedup']:.2f}x;"
+        f"required={g['required_speedup']:.0f}x;devices={g['devices']}",
+    ))
+    return rows
+
+
 def check_regression(rec, ref, factor=2.0):
     """Fail (return nonzero) if a gated timing regressed > factor vs ref.
 
-    Gates ``planned_sweep_s`` when present, and ``cold_start.primed_first_s``
+    Gates ``planned_sweep_s`` when present, ``cold_start.primed_first_s``
     when both records carry a cold-start leg (the coldstart-only record from
     ``--coldstart`` has no ``planned_sweep_s``; a pre-cold-start reference
-    has no ``cold_start``).
+    has no ``cold_start``), and the gate-device-count SPMD steady sweep when
+    both records carry a weak-scaling leg.
     """
     rc = 0
     if "planned_sweep_s" in rec:
@@ -575,6 +801,21 @@ def check_regression(rec, ref, factor=2.0):
             print(
                 f"cold_start.primed_first_s {got:.3f}s vs checked-in "
                 f"{want:.3f}s: ok"
+            )
+    if "weak_scaling" in rec and "weak_scaling" in ref:
+        key = str(SPMD_GATE_DEVICES)
+        got = rec["weak_scaling"]["legs"][key]["spmd_steady_s"]
+        want = ref["weak_scaling"]["legs"][key]["spmd_steady_s"]
+        if got > factor * want:
+            print(
+                f"REGRESSION: weak_scaling spmd_steady_s ({key} devices) "
+                f"{got:.3f}s > {factor:.1f}x checked-in {want:.3f}s"
+            )
+            rc = 1
+        else:
+            print(
+                f"weak_scaling spmd_steady_s ({key} devices) {got:.3f}s vs "
+                f"checked-in {want:.3f}s: ok"
             )
     return rc
 
@@ -604,8 +845,10 @@ def _run(quick=False, write_json=True):
     assert rec is not None, proc.stdout
     if not quick:
         # the cold-start leg spawns its own pair of subprocesses (the whole
-        # point is crossing a process boundary), so it runs from the parent
+        # point is crossing a process boundary), so it runs from the parent;
+        # the weak-scaling leg likewise needs one process per device count
         rec["cold_start"] = _run_coldstart()
+        rec["weak_scaling"] = _run_weak_scaling()
     if write_json:
         out_path = os.path.join(os.path.dirname(__file__), "bench_dist.json")
         with open(out_path, "w") as f:
@@ -664,7 +907,7 @@ def _run(quick=False, write_json=True):
                 f"devices={rec['devices']};n={sm['n_sites']};"
                 f"ediff={sm['energy_diff']:.1e}",
             ),
-        ] + coldstart_rows(rec["cold_start"])
+        ] + coldstart_rows(rec["cold_start"]) + spmd_rows(rec["weak_scaling"])
     return rows, rec
 
 
@@ -692,6 +935,9 @@ if __name__ == "__main__":
     if "--child-coldstart" in sys.argv:
         _coldstart_child_main()
         sys.exit(0)
+    if "--child-spmd" in sys.argv:
+        _spmd_child_main()
+        sys.exit(0)
     if "--child" in sys.argv:
         _child_main()
     else:
@@ -707,6 +953,17 @@ if __name__ == "__main__":
                 sys.exit("--check requires a path to a reference JSON")
             with open(ref_path) as f:
                 ref = json.load(f)
+        if "--spmd" in sys.argv:
+            # weak-scaling-only mode (the CI spmd job): skip the in-process
+            # bench and run just the per-device-count SPMD leg
+            rec = {"quick": True, "weak_scaling": _run_weak_scaling()}
+            for name, us, derived in spmd_rows(rec["weak_scaling"]):
+                print(f"{name},{us:.1f},{derived}")
+            out = os.path.join(os.path.dirname(__file__), "bench_spmd.json")
+            with open(out, "w") as f:
+                json.dump(rec, f, indent=2, sort_keys=True)
+            print(f"wrote {out}")
+            sys.exit(check_regression(rec, ref) if ref is not None else 0)
         if "--coldstart" in sys.argv:
             # coldstart-only mode (the CI coldstart job): skip the in-process
             # bench entirely and run just the two-subprocess leg

@@ -41,6 +41,11 @@ def main(argv=None):
                     help="mesh-shard blocks over all visible devices "
                          "(pair with XLA_FLAGS=--xla_force_host_platform_"
                          "device_count=8 on CPU)")
+    ap.add_argument("--spmd", action="store_true",
+                    help="true SPMD execution (docs/distributed.md): "
+                         "device-resident envs + shard_map collective "
+                         "bucket GEMMs over the (row, col) mesh; implies "
+                         "the batched engine path")
     ap.add_argument("--j2", type=float, default=0.5)
     ap.add_argument("--u", type=float, default=8.5)
     ap.add_argument("--check-ed", action="store_true",
@@ -59,9 +64,13 @@ def main(argv=None):
                          "start): a primed store takes the first sweep from "
                          "~20x steady-state cost to ~2x; a cold run primes it")
     args = ap.parse_args(argv)
-    if args.algo.endswith("_unplanned") and (args.shard or args.jit_matvec):
-        ap.error("--shard/--jit-matvec require an engine algo, "
+    if args.algo.endswith("_unplanned") and (
+        args.shard or args.spmd or args.jit_matvec
+    ):
+        ap.error("--shard/--spmd/--jit-matvec require an engine algo, "
                  "not " + args.algo)
+    if args.shard and args.spmd:
+        ap.error("--shard (storage mode) and --spmd are mutually exclusive")
     if args.algo.endswith("_unplanned") and args.svd_method not in (
         None, "unplanned",
     ):
@@ -78,18 +87,21 @@ def main(argv=None):
     n = args.lx * args.ly
 
     shard_policy = None
-    if args.shard:
+    if args.shard or args.spmd:
         from repro.dist import BlockShardPolicy, make_block_mesh
-        shard_policy = BlockShardPolicy(make_block_mesh())
+        shard_policy = BlockShardPolicy(
+            make_block_mesh(), mode="spmd" if args.spmd else "auto"
+        )
 
     schedule = [m for m in (8, 16, 32, 64, 128, 256) if m <= args.max_bond]
     print(f"{args.system}: {args.lx}x{args.ly} cylinder, {n} sites, "
-          f"algo={args.algo}, schedule={schedule}"
+          f"algo={'spmd' if args.spmd else args.algo}, schedule={schedule}"
           + (f", mesh={dict(shard_policy.mesh.shape)}" if shard_policy else ""))
     res = run_dmrg(space, terms, n, bond_schedule=schedule,
                    sweeps_per_bond=args.sweeps_per_bond,
                    davidson_iters=4, algo=args.algo, verbose=True,
-                   jit_matvec=args.jit_matvec, shard_policy=shard_policy,
+                   jit_matvec=args.jit_matvec or args.spmd,
+                   shard_policy=shard_policy, spmd=args.spmd,
                    svd_method=args.svd_method,
                    jit_env=False if args.no_jit_env
                    or args.algo.endswith("_unplanned") else None,
@@ -120,6 +132,10 @@ def main(argv=None):
             "schedule": schedule,
             "caches": cache_stats(),
         }
+        if args.spmd:
+            from repro.dist import spmd_stats
+
+            payload["spmd"] = spmd_stats()
         text = json.dumps(payload, indent=2, default=str)
         if args.stats_json == "-":
             print(text)

@@ -12,7 +12,7 @@ from typing import List, Optional, Sequence
 import jax.numpy as jnp
 
 from ..dist import persist
-from ..dist.shard import BlockShardPolicy
+from ..dist.shard import BlockShardPolicy, make_block_mesh
 from .checkpoint import (
     CheckpointManager,
     pack_run_state,
@@ -52,6 +52,7 @@ def run_dmrg(
     jit_matvec: bool = False,
     pad_matvec: Optional[bool] = None,
     shard_policy: Optional[BlockShardPolicy] = None,
+    spmd: bool = False,
     svd_method: Optional[str] = None,
     jit_env: Optional[bool] = None,
     mpo=None,
@@ -78,7 +79,28 @@ def run_dmrg(
     to <1e-10 (tests/test_persist.py).  A store already activated
     process-wide (``repro.dist.activate_store``) is used without passing it
     here; this argument scopes one to a single run.
+
+    ``spmd=True`` turns on true SPMD execution (DESIGN.md 3.10,
+    docs/distributed.md): MPS/MPO/environment tensors are pinned
+    device-resident on the 2-D ("row", "col") mesh and every bucketed GEMM
+    of the matvec and env stages runs as a shard_map collective program
+    (``dist/spmd.py``).  It implies ``jit_matvec=True`` (the compile-once
+    padded pipeline is what makes the collectives pay) and requires an
+    engine-backed ``algo``.  Pass ``shard_policy`` to control the mesh (its
+    mode must be "spmd"); omitted, a policy over all devices is built.
+    Energies equal the single-device run to <1e-10 at any device count
+    (tests/test_spmd.py).
     """
+    if spmd:
+        if shard_policy is None:
+            shard_policy = BlockShardPolicy(make_block_mesh(), mode="spmd")
+        elif shard_policy.mode != "spmd":
+            raise ValueError(
+                f"spmd=True needs a shard_policy with mode='spmd', got "
+                f"mode={shard_policy.mode!r} (storage-mode policies keep the "
+                f"gather-to-host path; pass spmd=False for that)"
+            )
+        jit_matvec = True
     with contextlib.ExitStack() as stack:
         if plan_store is not None:
             stack.enter_context(persist.using_store(plan_store))

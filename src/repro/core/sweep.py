@@ -9,7 +9,12 @@ is an engine (the default): a jitted planned matvec (``jit_matvec=True``)
 with bucket-padded operands so it compiles once per quantized structure
 (``pad_matvec``, defaulting to the jit flag), and a ``BlockShardPolicy``
 that keeps MPS/MPO/environment blocks mesh-sharded, mirroring the paper's
-distribute-every-block-over-all-processors layout.
+distribute-every-block-over-all-processors layout.  A policy in "spmd"
+mode (``run_dmrg(spmd=True)``) instead pins every stored tensor
+device-resident on the mesh — uploaded once in ``__init__``/``_init_envs``
+— and the engine executes all bucketed GEMMs as shard_map collective
+programs (``dist/spmd.py``, DESIGN.md 3.10); "storage" mode keeps the
+gather-before-compute fallback.
 
 The decomposition stage goes through the engine too (``svd_method``): the
 planned batched SVD (``dist/decomp.py``) by default, the seed per-sector
@@ -200,8 +205,12 @@ class DMRGEngine:
         T, W = self.mps.tensors, self.mpo
         self.left_envs: List[Optional[BlockSparseTensor]] = [None] * (n + 1)
         self.right_envs: List[Optional[BlockSparseTensor]] = [None] * (n + 1)
-        self.left_envs[0] = left_edge(T[0], W[0])
-        self.right_envs[n - 1] = right_edge(T[n - 1], W[n - 1])
+        # edges placed too: under an spmd-mode policy this is the one-time
+        # device-resident upload — every stored env (and the MPS/MPO placed
+        # in __init__) lives replicated on the mesh from here on and is
+        # never re-materialized on host between sites
+        self.left_envs[0] = self._place(left_edge(T[0], W[0]))
+        self.right_envs[n - 1] = self._place(right_edge(T[n - 1], W[n - 1]))
         # build right envs down to site 1 (first pair needs right_envs[1]) —
         # one planned right-to-left pass: fused jitted updates when jit_env
         for j in range(n - 2, 0, -1):

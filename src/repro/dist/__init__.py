@@ -13,9 +13,17 @@ execution:
               ``jax.export``ed bucket cores, so a fresh process's first
               sweep skips the plan/trace/compile pipeline (DESIGN.md
               Sec. 3.9).
-- ``shard``:  ``BlockShardPolicy`` — places each block's row/column modes on
-              mesh axes (the paper's "every block over all processors"
-              layout), with divisibility-aware fallback to replication.
+- ``shard``:  ``BlockShardPolicy`` — places blocks on the 2-D ("row",
+              "col") mesh: "spmd" mode pins tensors device-resident
+              (replicated, uploaded once) for shard_map compute; "storage"
+              mode keeps the sharded-storage / gather-before-compute
+              fallback with divisibility-aware mode assignment.
+- ``spmd``:   the true-SPMD compute layer (DESIGN.md 3.10): each shape
+              bucket's stacked GEMM as ONE shard_map program over the mesh
+              (pairs over "row", output columns over "col", one psum + one
+              tiled all_gather per bucket), plus the spmd variant of the
+              fused env core and the process-wide collective ledger
+              (``spmd.stats()``).
 - ``batch``:  shape-bucketed batched contraction execution (stacked
               same-shape GEMMs + segment-sum scatter) and the power-of-two
               sector padding that makes the jitted matvec compile once.
@@ -81,6 +89,11 @@ from .plan import (
     global_plan_cache,
 )
 from .shard import BlockShardPolicy, make_block_mesh
+from .spmd import (
+    make_spmd_gemm,
+    spmd_bucket_gemm,
+    stats as spmd_stats,
+)
 
 
 def cache_stats(*engines) -> dict:
@@ -142,6 +155,9 @@ __all__ = [
     "svd_split_planned",
     "BlockShardPolicy",
     "make_block_mesh",
+    "make_spmd_gemm",
+    "spmd_bucket_gemm",
+    "spmd_stats",
     "pad_block_sparse",
     "unpad_block_sparse",
 ]

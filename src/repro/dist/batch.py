@@ -20,6 +20,22 @@ DMRG throughput:
    the padding of the true matvec — and it quantizes the traced block
    structure, so the jitted Davidson matvec stops retracing every time a
    sweep's truncated SVD shifts a bond sector dimension by one.
+
+Equality guarantee: buckets execute the exact per-pair flops (no padding of
+M/K/N), so ``execute_batched`` equals the list algorithm block-for-block up
+to floating-point accumulation order (<=1e-13 on random f64 tensors,
+tests/test_batch.py; DMRG energies <1e-10 vs seed).  Host-sync count: zero —
+everything here dispatches device work and returns without blocking; the
+only host reads in a sweep are Davidson's Rayleigh-Ritz step and the SVD
+truncation sync, both outside this module.
+
+Mesh-axis mapping: none of its own.  The batched path is mesh-agnostic —
+tensor dims map to bucket-local (M, K, N) matricized axes, not mesh axes;
+index tables are memoized per mesh (``memo_dev_idx``) only so plans shared
+across policies never replay buffers committed under another mesh.  The
+mapping of bucket axes onto the ("row", "col") mesh lives in
+``dist/spmd.py`` (P over "row", N over "col"), injected here through the
+``gemm_fn`` hook of ``execute_batched`` / ``execute_batched_blocks``.
 """
 from __future__ import annotations
 
@@ -67,17 +83,20 @@ def execute_pairs(
 
 
 def matricize_lhs(
-    t: BlockSparseTensor, keep: Tuple[int, ...], ax: Tuple[int, ...]
+    t, keep: Tuple[int, ...], ax: Tuple[int, ...]
 ) -> BlockMats:
     """2-D (kept-rows, contracted-cols) form of every block of ``t``.
 
     Depends only on the contraction's static axes, not on the partner's block
     structure, so for the fixed Davidson operands (A, W_j, W_{j+1}, B) it can
     be computed once per solve instead of inside every matvec call.
+    ``t`` may be a ``BlockSparseTensor`` or a bare key->array block dict
+    (the fused env cores hold intermediates as dicts).
     """
     perm = keep + ax
     out: BlockMats = {}
-    for key, blk in t.blocks.items():
+    blocks = t.blocks if isinstance(t, BlockSparseTensor) else t
+    for key, blk in blocks.items():
         shape = blk.shape
         r = 1
         for i in keep:
@@ -87,12 +106,14 @@ def matricize_lhs(
 
 
 def matricize_rhs(
-    t: BlockSparseTensor, keep: Tuple[int, ...], ax: Tuple[int, ...]
+    t, keep: Tuple[int, ...], ax: Tuple[int, ...]
 ) -> BlockMats:
-    """2-D (contracted-rows, kept-cols) form of every block of ``t``."""
+    """2-D (contracted-rows, kept-cols) form of every block of ``t``
+    (tensor or bare block dict, like ``matricize_lhs``)."""
     perm = ax + keep
     out: BlockMats = {}
-    for key, blk in t.blocks.items():
+    blocks = t.blocks if isinstance(t, BlockSparseTensor) else t
+    for key, blk in blocks.items():
         shape = blk.shape
         r = 1
         for i in ax:
@@ -128,35 +149,25 @@ def memo_dev_idx(layout, mesh, tracing: bool, host_arrays):
     return cached
 
 
-def execute_batched(
+def execute_batched_blocks(
     plan: ContractionPlan,
-    a: BlockSparseTensor,
-    b: BlockSparseTensor,
+    a_mats: BlockMats,
+    b_mats: BlockMats,
     *,
-    a_mats: Optional[BlockMats] = None,
-    b_mats: Optional[BlockMats] = None,
     use_kernel: bool = False,
     interpret: bool = False,
     mesh=None,
-) -> BlockSparseTensor:
-    """Execute ``plan`` bucket-by-bucket as stacked batched GEMMs.
+    gemm_fn=None,
+) -> Dict[BlockKey, jax.Array]:
+    """The bucket loop on pre-matricized blocks, returning output blocks.
 
-    ``a_mats`` / ``b_mats`` are optional pre-matricized operand blocks (from
-    ``matricize_lhs`` / ``matricize_rhs``) for operands that are fixed across
-    many calls; live operands are matricized here.
-
-    Backend-equality guarantee: buckets execute the exact per-pair flops
-    (no padding), so the result equals the list algorithm block-for-block
-    up to floating-point accumulation order (<=1e-13 on random tensors,
-    tests/test_batch.py; DMRG energies <1e-10 vs seed).
+    ``gemm_fn(lhs, rhs, oi, num_out)`` overrides the per-bucket GEMM
+    (default ``block_sparse_matmul``); ``dist/spmd.py`` injects its
+    shard_map collective GEMM here so the identical bucket/gather tables
+    drive both the single-device and the SPMD execution.  Shared by
+    ``execute_batched`` and the fused env cores.
     """
-    if not plan.pairs:
-        return BlockSparseTensor(plan.out_indices, {}, plan.out_charge)
     layout = plan.batched
-    if a_mats is None:
-        a_mats = matricize_lhs(a, plan.keep_a, plan.ax_a)
-    if b_mats is None:
-        b_mats = matricize_rhs(b, plan.keep_b, plan.ax_b)
     tracing = any(
         isinstance(v, jax.core.Tracer)
         for mats in (a_mats, b_mats)
@@ -174,27 +185,74 @@ def execute_batched(
             lhs = lhs[li]
         if not bucket.ri_identity:
             rhs = rhs[ri]
-        out = block_sparse_matmul(
-            lhs,
-            rhs,
-            oi,
-            len(bucket.out_keys),
-            interpret=interpret,
-            use_kernel=use_kernel,
-        )
+        if gemm_fn is not None:
+            out = gemm_fn(lhs, rhs, oi, len(bucket.out_keys))
+        else:
+            out = block_sparse_matmul(
+                lhs,
+                rhs,
+                oi,
+                len(bucket.out_keys),
+                interpret=interpret,
+                use_kernel=use_kernel,
+            )
         for slot, kc in enumerate(bucket.out_keys):
             piece = out[slot]
             prev = out_acc.get(kc)
             out_acc[kc] = piece if prev is None else prev + piece
+    return {
+        kc: mat.reshape(plan.out_block_shape(kc)) for kc, mat in out_acc.items()
+    }
+
+
+def execute_batched(
+    plan: ContractionPlan,
+    a: BlockSparseTensor,
+    b: BlockSparseTensor,
+    *,
+    a_mats: Optional[BlockMats] = None,
+    b_mats: Optional[BlockMats] = None,
+    use_kernel: bool = False,
+    interpret: bool = False,
+    mesh=None,
+    gemm_fn=None,
+) -> BlockSparseTensor:
+    """Execute ``plan`` bucket-by-bucket as stacked batched GEMMs.
+
+    ``a_mats`` / ``b_mats`` are optional pre-matricized operand blocks (from
+    ``matricize_lhs`` / ``matricize_rhs``) for operands that are fixed across
+    many calls; live operands are matricized here.  ``gemm_fn`` swaps the
+    per-bucket GEMM (see ``execute_batched_blocks``).
+
+    Backend-equality guarantee: buckets execute the exact per-pair flops
+    (no padding), so the result equals the list algorithm block-for-block
+    up to floating-point accumulation order (<=1e-13 on random tensors,
+    tests/test_batch.py; DMRG energies <1e-10 vs seed).
+    """
+    if not plan.pairs:
+        return BlockSparseTensor(plan.out_indices, {}, plan.out_charge)
+    if a_mats is None:
+        a_mats = matricize_lhs(a, plan.keep_a, plan.ax_a)
+    if b_mats is None:
+        b_mats = matricize_rhs(b, plan.keep_b, plan.ax_b)
+    out_blocks = execute_batched_blocks(
+        plan,
+        a_mats,
+        b_mats,
+        use_kernel=use_kernel,
+        interpret=interpret,
+        mesh=mesh,
+        gemm_fn=gemm_fn,
+    )
     # fault point: NaN-poison one bucket's output, simulating a bad GEMM on
     # a flaky node.  Never under tracing — a trace-time NaN would be baked
     # into a compiled executable cached far beyond the fault's lifetime.
-    if not tracing and faults.fire("batch.gemm_nan") is not None:
-        k0 = next(iter(out_acc))
-        out_acc[k0] = jnp.full_like(out_acc[k0], jnp.nan)
-    out_blocks = {
-        kc: mat.reshape(plan.out_block_shape(kc)) for kc, mat in out_acc.items()
-    }
+    tracing = any(
+        isinstance(v, jax.core.Tracer) for v in out_blocks.values()
+    )
+    if not tracing and out_blocks and faults.fire("batch.gemm_nan") is not None:
+        k0 = next(iter(out_blocks))
+        out_blocks[k0] = jnp.full_like(out_blocks[k0], jnp.nan)
     return BlockSparseTensor(plan.out_indices, out_blocks, plan.out_charge)
 
 

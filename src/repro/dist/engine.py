@@ -17,7 +17,10 @@ through ``core/env.py`` / ``core/sweep.py``: it is callable as
    padded-flop count looks;
 3. executes the plan and, when a ``BlockShardPolicy`` is attached, places the
    output blocks on the device mesh (outside jit; under tracing XLA owns
-   layout).
+   layout).  Under an spmd-mode policy the backend choice is overridden:
+   every contraction executes the batched bucket tables through the
+   shard_map collective GEMM of ``dist/spmd.py`` (DESIGN.md 3.10), with
+   operands device-resident and outputs replicated on the mesh.
 
 ``two_site_matvec`` is the planned Davidson matvec of paper Fig. 1d;
 ``matvec_fn`` optionally jits it.  Because ``BlockSparseTensor`` is a pytree
@@ -44,7 +47,7 @@ from .batch import (
     matricize_rhs,
     memo_dev_idx,
 )
-from . import persist
+from . import persist, spmd as spmd_mod
 from .decomp import DecompositionEngine
 from .envcore import EnvironmentEngine
 from .plan import Axes, ContractionPlan, PlanCache, global_plan_cache
@@ -59,7 +62,9 @@ PAIR_OVERHEAD_FLOPS = 16384.0
 # exception the engine retries each rung BELOW the failed one in this order,
 # ending at the seed ``tensor.blocksparse.contract``.  Ordered fastest/most
 # specialized first, so a failure costs the least capable machinery it can.
-CONTRACTION_LADDER: Tuple[str, ...] = ("csr", "batched", "dense", "list")
+# "spmd" is only a valid rung under an spmd-mode policy (operands are then
+# mesh-resident replicated, so every lower rung still computes correctly).
+CONTRACTION_LADDER: Tuple[str, ...] = ("spmd", "csr", "batched", "dense", "list")
 
 
 class ContractionEngine:
@@ -102,7 +107,7 @@ class ContractionEngine:
         # environment stage (dist/envcore.py): per-engine for the same
         # reason, sharing the global EnvPlanCache and its compiled cores
         self.env = env if env is not None else EnvironmentEngine()
-        zero = {"list": 0, "dense": 0, "csr": 0, "batched": 0}
+        zero = {"list": 0, "dense": 0, "csr": 0, "batched": 0, "spmd": 0}
         self.backend_counts: Dict[str, int] = dict(zero)
         self.backend_flops: Dict[str, float] = {k: 0.0 for k in zero}
         self.backend_seconds: Dict[str, float] = {k: 0.0 for k in zero}
@@ -140,7 +145,14 @@ class ContractionEngine:
         b_mats=None,
     ) -> BlockSparseTensor:
         plan = self.cache.get(a, b, axes)
-        backend = self.backend if self.backend != "auto" else self.choose_backend(plan)
+        if self._spmd_mode:
+            # spmd-mode policy: every contraction runs the shard_map bucket
+            # GEMMs (dist/spmd.py) so compute partitions over the mesh
+            backend = "spmd"
+        elif self.backend != "auto":
+            backend = self.backend
+        else:
+            backend = self.choose_backend(plan)
         self.backend_counts[backend] += 1
         self.backend_flops[backend] += self._plan_flops(plan, backend)
         if (
@@ -151,8 +163,8 @@ class ContractionEngine:
             a, b = self.policy.replicated(a), self.policy.replicated(b)
         t0 = time.perf_counter()
         try:
-            if backend == "batched":
-                out = self._execute_batched(
+            if backend in ("batched", "spmd"):
+                out = getattr(self, f"_execute_{backend}")(
                     plan, a, b, a_mats=a_mats, b_mats=b_mats
                 )
             else:
@@ -200,7 +212,13 @@ class ContractionEngine:
             return plan.flops_dense
         if backend == "csr":
             return plan.flops_csr if plan.num_pairs else 0.0
-        return plan.flops_list  # list and batched execute the exact pair flops
+        # list, batched and spmd execute the exact pair flops (spmd's P/N
+        # divisibility zero-padding adds no counted work)
+        return plan.flops_list
+
+    @property
+    def _spmd_mode(self) -> bool:
+        return self.policy is not None and self.policy.mode == "spmd"
 
     # ---------------------------------------------------- degradation ladder
     def _degraded_call(
@@ -227,6 +245,8 @@ class ContractionEngine:
         )
         for rung in CONTRACTION_LADDER[start:]:
             if rung == "csr" and not self.allow_csr:
+                continue
+            if rung == "spmd" and not self._spmd_mode:
                 continue
             try:
                 out = getattr(self, f"_execute_{rung}")(plan, a, b)
@@ -270,6 +290,30 @@ class ContractionEngine:
             use_kernel=self.use_kernel,
             interpret=self.interpret,
             mesh=self._mesh_key(),
+        )
+
+    def _execute_spmd(
+        self,
+        plan: ContractionPlan,
+        a: BlockSparseTensor,
+        b: BlockSparseTensor,
+        *,
+        a_mats=None,
+        b_mats=None,
+    ) -> BlockSparseTensor:
+        """The batched bucket tables executed through the shard_map
+        collective GEMM (dist/spmd.py): pairs over "row", output columns
+        over "col", one psum + one all_gather per bucket."""
+        return execute_batched(
+            plan,
+            a,
+            b,
+            a_mats=a_mats,
+            b_mats=b_mats,
+            mesh=self._mesh_key(),
+            gemm_fn=spmd_mod.make_spmd_gemm(
+                self.policy.mesh, self.policy.row_axis, self.policy.col_axis
+            ),
         )
 
     def _mesh_key(self):
@@ -358,11 +402,12 @@ class ContractionEngine:
             Wj = self.policy.replicated(Wj)
             Wj1 = self.policy.replicated(Wj1)
             B = self.policy.replicated(B)
-        # "auto" may route any matvec step to the batched backend, so it
-        # precomputes the fixed-operand mats too (unused steps ignore them)
+        # "auto" may route any matvec step to the batched backend, and spmd
+        # mode routes every step through the bucketed spmd GEMM, so both
+        # precompute the fixed-operand mats (unused steps ignore them)
         mats = (
             self._fixed_operand_mats(A, Wj, Wj1, B)
-            if self.backend in ("batched", "auto")
+            if self.backend in ("batched", "auto") or self._spmd_mode
             else None
         )
         if not jit:
@@ -515,7 +560,16 @@ class ContractionEngine:
                 # every one of the 2(n-1) updates per sweep
                 mpo_padded = self.policy.replicated(mpo_padded)
         fn = self.env.update_left if side == "left" else self.env.update_right
-        out = fn(env, T, W, mpo_padded=mpo_padded)
+        out = fn(
+            env,
+            T,
+            W,
+            mpo_padded=mpo_padded,
+            # spmd mode: the fused core's three contractions run as shard_map
+            # bucket GEMMs on the policy mesh (envcore builds/caches the
+            # spmd variant of the core per mesh)
+            spmd_mesh=self.policy.mesh if self._spmd_mode else None,
+        )
         if (
             self.policy is not None
             and not self.policy.storage_only
@@ -559,4 +613,8 @@ class ContractionEngine:
             "degradations": dict(self.degradations),
             "decomp": self.decomp.stats(),
             "env": self.env.stats(),
+            # process-wide SPMD collective ledger (dist/spmd.py): gemm
+            # calls, fallbacks, traced psum/all_gather counts.  Module-level
+            # because compiled SPMD programs are shared across engines.
+            "spmd": spmd_mod.stats(),
         }

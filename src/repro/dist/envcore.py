@@ -135,14 +135,16 @@ class EnvironmentEngine:
         self.jit_retraces = 0
 
     # ------------------------------------------------------------- jit core
-    def _build_core(self, plan: EnvironmentPlan):
+    def _build_core(self, plan: EnvironmentPlan, body=None):
         """Compile (or wrap eagerly) the shared ``env_core_body``.
 
         One compiled executable per padded block structure — plan metadata
-        folds into the trace as constants.
+        folds into the trace as constants.  ``body`` overrides the traced
+        body (the spmd variant passes ``spmd.spmd_env_core_body``).
         """
         engine = self
-        body = env_core_body(plan)
+        if body is None:
+            body = env_core_body(plan)
         if not self.jit:
             return body
 
@@ -160,9 +162,17 @@ class EnvironmentEngine:
         W: BlockSparseTensor,
         *,
         mpo_padded: Optional[BlockSparseTensor] = None,
+        spmd_mesh=None,
     ) -> BlockSparseTensor:
-        """A' = A · T · W · conj(T): absorb site T into the left env."""
-        return self._update("left", A, T, W, mpo_padded)
+        """A' = A · T · W · conj(T): absorb site T into the left env.
+
+        ``spmd_mesh`` (a ("row","col") mesh) switches the fused core to the
+        shard_map-collective variant (``dist/spmd.py``): same plan, same
+        three contractions, bucket GEMMs partitioned over the mesh, fused
+        into one compiled core (safe because the bucket programs keep
+        replicated shard_map boundaries; see ``_update``).
+        """
+        return self._update("left", A, T, W, mpo_padded, spmd_mesh)
 
     def update_right(
         self,
@@ -171,11 +181,12 @@ class EnvironmentEngine:
         W: BlockSparseTensor,
         *,
         mpo_padded: Optional[BlockSparseTensor] = None,
+        spmd_mesh=None,
     ) -> BlockSparseTensor:
         """B' = T · W · conj(T) · B: absorb site T into the right env."""
-        return self._update("right", B, T, W, mpo_padded)
+        return self._update("right", B, T, W, mpo_padded, spmd_mesh)
 
-    def _update(self, side, env, T, W, mpo_padded=None):
+    def _update(self, side, env, T, W, mpo_padded=None, spmd_mesh=None):
         # fault point: exception out of the fused env core, standing in for
         # a compilation/launch failure of the jitted program.  Raised before
         # any work so the caller's seed-extend fallback sees a clean slate.
@@ -206,6 +217,34 @@ class EnvironmentEngine:
         tracing = any(
             isinstance(x, jax.core.Tracer) for xs in args for x in xs
         )
+        if spmd_mesh is not None:
+            # spmd cores close over a live mesh (shard_map) — never
+            # exportable, cached per mesh so globally shared plans don't
+            # replay one mesh's program under another.  Jitting the fused
+            # core over the inlined shard_map programs is safe ONLY because
+            # the bucket GEMMs keep replicated boundaries (dist/spmd.py):
+            # sharded shard_map in_specs under an enclosing jit trigger the
+            # XLA partitioner's rematerialization path, which corrupts
+            # values on CPU meshes (16x inflation observed).
+            from .spmd import spmd_env_core_body
+
+            key = ("spmd", spmd_mesh, self.jit)
+            core = plan._exec.get(key)
+            if core is None:
+                core = self._build_core(
+                    plan, body=spmd_env_core_body(plan, spmd_mesh)
+                )
+                plan._exec[key] = core
+            blocks = core(*args)
+            out = BlockSparseTensor(
+                plan.out_indices, dict(zip(plan.out_keys, blocks)), plan.out_charge
+            )
+            if self.pad:
+                out = unpad_block_sparse(out, env_out_indices(T, W, side))
+            self.env_updates += 1
+            self.env_flops += plan.flops
+            self.env_seconds += time.perf_counter() - t0
+            return out
         store = persist.active_store() if self.jit and not tracing else None
         if store is not None:
             core = plan._exec.get("export")

@@ -1,17 +1,49 @@
-"""Block sharding: every block over all processors (paper Fig. 2a).
+"""Block placement on the 2-D processor grid: SPMD vs storage modes.
 
 The paper's key layout decision is to distribute *each* quantum-number block
 over the whole processor grid instead of assigning whole blocks to nodes —
 block sizes are wildly non-uniform (the largest scales ~ m), so
-blocks-to-nodes load-imbalances.  Here each block is a ``jax.Array`` placed
-with a ``NamedSharding`` over a 2-D ("row", "col") device mesh built by
-``launch/mesh.make_mesh``: the block's largest mode divisible by the "row"
-axis size is row-sharded, the largest remaining mode divisible by the "col"
-axis size is col-sharded, and everything else — including whole blocks whose
-modes are all indivisible, common for the tiny edge sectors — falls back to
-replication.  Replication is always correct (jax inserts resharding
-collectives as needed), so the policy is purely a performance hint and the
-sharded sweep is numerically identical to the single-device sweep.
+blocks-to-nodes load-imbalances.  ``BlockShardPolicy`` realizes that over a
+2-D ("row", "col") device mesh built by ``make_block_mesh``, in one of two
+modes:
+
+- **"spmd"** (the real distributed path, DESIGN.md 3.10): tensors are pinned
+  **device-resident** — every block is uploaded ONCE to the fully-replicated
+  mesh sharding and never re-materializes on host between sites — and the
+  heavy compute (the bucketed batched GEMMs of the matvec and env stages) is
+  *work*-sharded by ``dist/spmd.py``: inside each compiled SPMD program the
+  stacked pair axis partitions over "row" and the output block columns over
+  "col", rejoined by one psum + one tiled all_gather per bucket.  Mesh-axis
+  mapping of stored tensor dims: none — storage is replicated (a no-op
+  ``place_block`` once resident); the "row"/"col" axes carry bucket work,
+  not resident layout.  Host-sync count: zero placements or gathers per
+  site after ``_init_envs``.
+
+- **"storage"** (the fallback, kept as the pre-SPMD behavior): blocks are
+  *stored* sharded — the block's largest mode divisible by the "row" axis
+  size maps to "row", the largest remaining mode divisible by the "col"
+  size to "col", everything else replicated (``spec_for``) — but every
+  engine operation gathers operands to replicated form first (a
+  ``device_put`` reshard: runtime copies, ~2 host-coordinated gathers per
+  contraction — a ~7x steady-state overhead on the batched backend at 4
+  fake devices that the SPMD mode removes; see ``weak_scaling`` in
+  benchmarks/bench_dist.json).
+  Required shape on the CPU host-device backend when compute must stay
+  eager: eager ops on *sharded* arrays each compile their own collectives,
+  and the CPU runtime interleaves collectives from different computations
+  across device threads and deadlocks their rendezvous.
+
+- "auto" (default): "storage" on an all-CPU mesh, "spmd" otherwise.  The
+  SPMD mode is opt-in on CPU fake-device meshes (``run_dmrg(spmd=True)``)
+  because it routes all engine contractions through jitted shard_map
+  programs — safe (single-program collectives are ordered) but a behavior
+  change "auto" must not spring on existing storage-mode callers.
+
+Equality guarantee: placement never changes values in either mode — the
+sharded/replicated sweeps match the single-device sweep to <1e-10 (storage:
+energy diff 0 in the 8-fake-device smoke; spmd: <1e-10 at device counts
+{1, 2, 4, 8}, tests/test_spmd.py — the SPMD bucket GEMM reassociates the
+pair reduction, see ``dist/spmd.py``).
 """
 from __future__ import annotations
 
@@ -46,21 +78,18 @@ def make_block_mesh(
 
 @dataclasses.dataclass
 class BlockShardPolicy:
-    """Places each block's modes on mesh axes, replicating when indivisible.
+    """Places blocks on the mesh; mode picks the execution style.
 
-    ``mode`` selects how sharded blocks are *computed* on:
+    ``mode``:
 
-    - "spmd": operands stay sharded through eager ops; XLA partitions each
-      GEMM and inserts collectives (the intended layout on TPU/GPU, where the
-      runtime orders collectives per device).
-    - "storage": blocks are stored sharded on the mesh, but the engine
-      gathers operands to replicated form (a device_put reshard — runtime
-      copies, no XLA collectives) before computing.  Required on the CPU
-      host-device backend: eager ops each compile their own collectives, the
-      CPU runtime dispatches computations asynchronously, and collectives
-      from different computations (over different device subsets) interleave
-      across device threads and deadlock their rendezvous.
+    - "spmd": device-resident replicated storage + shard_map collective
+      compute (``dist/spmd.py``); ``place_block`` uploads a block to the
+      mesh once and is a no-op when it is already resident.
+    - "storage": sharded storage (``spec_for`` row/col assignment) with
+      gather-before-compute in the engines.
     - "auto" (default): "storage" on an all-CPU mesh, "spmd" otherwise.
+
+    See the module docstring for the full dataflow of each mode.
     """
 
     mesh: Mesh
@@ -73,12 +102,16 @@ class BlockShardPolicy:
         if self.mode == "auto":
             all_cpu = all(d.platform == "cpu" for d in self.mesh.devices.flat)
             self.mode = "storage" if all_cpu else "spmd"
+        self._device_set = frozenset(self.mesh.devices.flat)
 
     @property
     def storage_only(self) -> bool:
         return self.mode == "storage"
 
     def spec_for(self, shape: Tuple[int, ...]) -> P:
+        """Storage-mode layout: largest divisible mode -> "row", next ->
+        "col", indivisible modes replicated.  (SPMD mode stores replicated
+        and ignores this; kept public for layout introspection.)"""
         row_n = int(self.mesh.shape[self.row_axis])
         col_n = int(self.mesh.shape[self.col_axis])
         assign = [None] * len(shape)
@@ -105,7 +138,22 @@ class BlockShardPolicy:
     def place_block(self, block: jax.Array) -> jax.Array:
         if isinstance(block, jax.core.Tracer):  # inside jit: layout is XLA's
             return block
+        if self.mode == "spmd":
+            return self._mesh_resident(block)
         return jax.device_put(block, self.sharding_for(block.shape))
+
+    def _mesh_resident(self, block: jax.Array) -> jax.Array:
+        """Upload once to the replicated mesh sharding; no-op when already
+        resident (the steady state: SPMD program outputs come back
+        replicated on the same mesh, so sweeps never re-upload)."""
+        sh = getattr(block, "sharding", None)
+        if (
+            sh is not None
+            and sh.is_fully_replicated
+            and getattr(sh, "device_set", None) == self._device_set
+        ):
+            return block
+        return jax.device_put(block, NamedSharding(self.mesh, P()))
 
     def place(self, t: BlockSparseTensor) -> BlockSparseTensor:
         """Re-place every block of a tensor per the policy (no-op on values)."""
@@ -127,7 +175,9 @@ class BlockShardPolicy:
 
     def replicated(self, t: BlockSparseTensor) -> BlockSparseTensor:
         """Gather every block to full replication (runtime copy, no XLA
-        collectives) so downstream eager math is collective-free."""
+        collectives) so downstream eager math is collective-free.  The
+        storage-mode gather; in spmd mode blocks are already replicated
+        and this is a no-op."""
         return BlockSparseTensor(
             t.indices,
             {k: self._replicated_block(b) for k, b in t.blocks.items()},

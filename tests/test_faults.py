@@ -105,7 +105,7 @@ class TestDegradationLadder:
     def test_ladder_ordering(self):
         """The documented ladder runs fastest-to-safest, ending at the seed,
         and a failed rung only ever retries rungs BELOW itself."""
-        assert CONTRACTION_LADDER == ("csr", "batched", "dense", "list")
+        assert CONTRACTION_LADDER == ("spmd", "csr", "batched", "dense", "list")
         for i, rung in enumerate(CONTRACTION_LADDER):
             below = CONTRACTION_LADDER[CONTRACTION_LADDER.index(rung) + 1:]
             assert below == CONTRACTION_LADDER[i + 1:]
